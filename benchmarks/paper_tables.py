@@ -1,0 +1,137 @@
+"""One benchmark per paper table, reproduced on the calibrated Hydra model.
+
+The paper's numbers are machine+library artifacts (36x32 dual-OmniPath,
+three MPI libs); reproduction means the simulator recovers the *structure*:
+per-(algorithm, k, c) times in the same regime, with the same orderings and
+crossovers.  Each function emits CSV rows
+
+    table,impl,k,c,sim_us,paper_us
+
+where ``paper_us`` is the published Open MPI avg (when that cell exists in
+the paper) for side-by-side comparison.
+"""
+
+from __future__ import annotations
+
+from repro.core import schedule as S
+from repro.core.simulate import simulate
+from repro.core.topology import Topology, hydra_machine
+
+M = hydra_machine()
+TOPO = M.topo  # 36 x 32, k=2 physical
+
+# Paper reference points (Open MPI 3.1.3, avg us) — table: {(impl,k,c): us}
+PAPER = {
+    # Table 2/3: alltoall on-node vs across nodes (p=32, c per proc)
+    ("a2a_n1", 32, 31250): 4618.21,
+    ("a2a_n32", 32, 31250): 448.03,
+    ("a2a_n1", 32, 1875): 995.89,
+    ("a2a_n32", 32, 1875): 72.78,
+    # Tables 8-9: k-lane bcast
+    ("klane_bcast", 1, 1_000_000): 19657.63,
+    ("klane_bcast", 2, 1_000_000): 28057.86,
+    ("klane_bcast", 6, 1_000_000): 26799.26,
+    ("klane_bcast", 6, 10_000): 272.23,
+    # Tables 10-11: k-ported bcast
+    ("kported_bcast", 1, 1_000_000): 9206.83,
+    ("kported_bcast", 2, 1_000_000): 8600.59,
+    ("kported_bcast", 6, 1_000_000): 10819.07,
+    ("kported_bcast", 6, 10_000): 136.73,
+    # Table 12: full-lane bcast
+    ("fulllane_bcast", 6, 1_000_000): 3309.16,
+    ("fulllane_bcast", 6, 10_000): 82.44,
+    # Tables 23-27: scatter (c per proc)
+    ("kported_scatter", 1, 869): 453.82,
+    ("kported_scatter", 6, 869): 388.39,
+    ("klane_scatter", 1, 869): 458.39,
+    ("klane_scatter", 6, 869): 460.32,
+    ("fulllane_scatter", 6, 869): 1444.02,
+    # Tables 38-41: alltoall p=1152 (c per proc; per-pair block ~ c/p -> use c)
+    ("kported_a2a", 1, 869): 11784.61,
+    ("kported_a2a", 6, 869): 11187.27,
+    ("kported_a2a", 6, 1): 1250.47,
+    ("klane_a2a", 32, 1): 827.90,
+    ("fulllane_a2a", 6, 1): 121.41,
+    ("fulllane_a2a", 6, 869): 12233.77,
+}
+
+_BCAST_C = [100, 10_000, 1_000_000]
+_SCATTER_C = [9, 87, 869]
+_A2A_C = [1, 9, 87, 869]
+
+
+def _row(table, impl, k, c, us):
+    ref = PAPER.get((impl, k, c), "")
+    return f"{table},{impl},{k},{c},{us:.2f},{ref}"
+
+
+def table_alltoall_node_vs_network():
+    """Paper §4.1 (Tables 2-7): 32-proc alltoall on one node vs 32 nodes."""
+    rows = []
+    for c in [32, 1875, 31250]:
+        blk = max(1, c // 32)
+        on = Topology(1, 32, 2)
+        off = Topology(32, 1, 1)
+        t_on = simulate(S.kported_alltoall(32, 32, blk),
+                        type(M)(topo=on, cost=M.cost)).time_us
+        t_off = simulate(S.kported_alltoall(32, 32, blk),
+                         type(M)(topo=off, cost=M.cost)).time_us
+        rows.append(_row("T2-7", "a2a_n1", 32, c, t_on))
+        rows.append(_row("T2-7", "a2a_n32", 32, c, t_off))
+    return rows
+
+
+def table_broadcast():
+    """Paper §4.2 (Tables 8-22): k-lane vs k-ported vs full-lane broadcast."""
+    rows = []
+    for c in _BCAST_C:
+        for k in (1, 2, 6):
+            rows.append(_row("T8-9", "klane_bcast", k,
+                             c, simulate(S.klane_broadcast(TOPO, k, c), M).time_us))
+            rows.append(_row("T10-11", "kported_bcast", k,
+                             c, simulate(S.kported_broadcast(TOPO.p, k, c), M).time_us))
+        rows.append(_row("T12", "fulllane_bcast", 6,
+                         c, simulate(S.fulllane_broadcast(TOPO, c), M).time_us))
+    return rows
+
+
+def table_scatter():
+    """Paper §4.3 (Tables 23-37)."""
+    rows = []
+    for c in _SCATTER_C:
+        for k in (1, 2, 6):
+            rows.append(_row("T23-24", "klane_scatter", k,
+                             c, simulate(S.klane_scatter(TOPO, k, c), M).time_us))
+            rows.append(_row("T25-26", "kported_scatter", k,
+                             c, simulate(S.kported_scatter(TOPO.p, k, c), M).time_us))
+        rows.append(_row("T27", "fulllane_scatter", 6,
+                         c, simulate(S.fulllane_scatter(TOPO, c), M).time_us))
+    return rows
+
+
+def table_alltoall():
+    """Paper §4.4 (Tables 38-49).  c is the per-proc count; the per-pair
+    block is c/p (>=1)."""
+    rows = []
+    for c in _A2A_C:
+        blk = max(1, c // TOPO.p) if c >= TOPO.p else 1
+        # the paper's counts are small; use c directly as block for c<p
+        blk = max(1, c // 32)
+        for k in (1, 6):
+            rows.append(_row("T39-40", "kported_a2a", k,
+                             c, simulate(S.kported_alltoall(TOPO.p, k, blk), M).time_us))
+        rows.append(_row("T38", "klane_a2a", 32,
+                         c, simulate(S.klane_alltoall(TOPO, blk), M).time_us))
+        rows.append(_row("T41", "fulllane_a2a", 6,
+                         c, simulate(S.fulllane_alltoall(TOPO, blk), M).time_us))
+        rows.append(_row("T41b", "bruck_a2a", 6,
+                         c, simulate(S.bruck_alltoall(TOPO.p, 6, blk), M).time_us))
+    return rows
+
+
+ALL_TABLES = [
+    table_alltoall_node_vs_network,
+    table_broadcast,
+    table_scatter,
+    table_alltoall,
+]

@@ -1,0 +1,135 @@
+"""Roofline extraction from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from experiments/dryrun/*.json:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(The dry-run records *per-device* quantities — the compiled module is the
+per-device program — so no further division by chip count is needed.)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (intra-pod terms); cross-pod collective bytes ride DCN at ~25 GB/s per
+concurrent stream, but we report against the ICI constant per the
+assignment and note DCN separately.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+__all__ = ["load_cells", "roofline_row", "roofline_table", "format_markdown"]
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _model_flops(rec: dict, shape: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) per device; decode steps use
+    2*N_active per generated token."""
+    n_act = rec.get("params_active", rec.get("params", 0))
+    dev = rec.get("num_devices", 256)
+    from repro.configs.base import SHAPES
+    sh = SHAPES[shape]
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * n_act * tokens / dev
+    if sh.kind == "prefill":
+        tokens = sh.seq_len * sh.global_batch
+        return 2.0 * n_act * tokens / dev
+    return 2.0 * n_act * sh.global_batch / dev  # decode: one token per seq
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["hbm_bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_total"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = _model_flops(rec, rec["shape"])
+    useful = mf / rec["flops_per_device"] if rec["flops_per_device"] else 0.0
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "backend": rec.get("backend", "xla"),
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_ratio": useful,
+        # step-time lower bound = dominant term; roofline fraction = how much
+        # of that bound is useful model compute
+        "roofline_frac": (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0,
+        "mem_gib": (rec["memory"]["argument_bytes"]
+                    + rec["memory"]["temp_bytes"]) / 2**30,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def roofline_table(dryrun_dir: str = "experiments/dryrun",
+                   mesh: str | None = "single", *,
+                   include_opt: bool = False) -> list[dict]:
+    rows = []
+    for rec in load_cells(dryrun_dir):
+        if mesh is not None and rec.get("mesh") != mesh:
+            continue
+        if rec.get("backend", "xla") != "xla":
+            continue
+        if rec.get("opt", False) != include_opt:
+            continue
+        row = roofline_row(rec)
+        if row is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh"), "skipped": rec.get("reason", rec.get("error", ""))})
+        else:
+            rows.append(row)
+    return rows
+
+
+def format_markdown(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "6ND/HLO | roofline frac | mem GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['mem_gib']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def csv_rows(rows: list[dict]) -> list[str]:
+    out = []
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"roofline,{r['arch']},{r['shape']},skipped,,,,")
+        else:
+            out.append(
+                f"roofline,{r['arch']},{r['shape']},{r['dominant']},"
+                f"{r['compute_s']:.4e},{r['memory_s']:.4e},"
+                f"{r['collective_s']:.4e},{r['roofline_frac']:.4f}"
+            )
+    return out

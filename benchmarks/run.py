@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one section per paper table plus the
+TPU projection, gradient-sync HLO comparison, and the roofline summary.
+
+Prints ``name,impl,k,c,sim_us,paper_us`` CSV rows (and roofline rows from
+the dry-run artifacts when present).
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-hlo] [--only paper|tpu|hlo|roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["paper", "tpu", "hlo", "roofline"],
+                    default=None)
+    ap.add_argument("--skip-hlo", action="store_true")
+    args = ap.parse_args()
+
+    print("table,impl,k,c,sim_us,paper_us")
+    if args.only in (None, "paper"):
+        from benchmarks.paper_tables import ALL_TABLES
+        for fn in ALL_TABLES:
+            for row in fn():
+                print(row, flush=True)
+    if args.only in (None, "tpu"):
+        from benchmarks.collective_bench import tpu_projection
+        for row in tpu_projection():
+            print(row, flush=True)
+    if args.only in (None, "hlo") and not args.skip_hlo:
+        from benchmarks.collective_bench import grad_sync_hlo
+        for row in grad_sync_hlo():
+            print(row, flush=True)
+    if args.only in (None, "roofline"):
+        import os
+        from benchmarks.roofline import csv_rows, roofline_table
+        emitted = False
+        # complete baseline table first, then the optimized cells
+        for label, d in (("baseline", "experiments/dryrun_baseline"),
+                         ("optimized", "experiments/dryrun")):
+            if os.path.isdir(d):
+                for row in csv_rows(roofline_table(d)):
+                    print(f"{label}_{row}", flush=True)
+                emitted = True
+        if not emitted:
+            print("roofline,,,no dry-run artifacts (run repro.launch.dryrun),,,")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Collective algorithm playground: generate, verify, simulate and compare
+every schedule family from the paper on both machine presets.
+
+  PYTHONPATH=src python examples/collective_playground.py [--N 8] [--n 16]
+"""
+
+import argparse
+
+from repro.core import schedule as S
+from repro.core.simulate import simulate
+from repro.core.topology import Machine, Topology, hydra_machine, TPU_V5E
+from repro.core.selector import crossover_table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--N", type=int, default=8, help="nodes")
+    ap.add_argument("--n", type=int, default=16, help="procs per node")
+    ap.add_argument("--k", type=int, default=2, help="lanes")
+    ap.add_argument("--c", type=int, default=100_000)
+    args = ap.parse_args()
+
+    topo = Topology(args.N, args.n, args.k)
+    hydra = Machine(topo=topo, cost=hydra_machine().cost)
+    tpu = Machine(topo=topo, cost=TPU_V5E.cost)
+
+    print(f"machine: N={args.N} nodes x n={args.n} procs, k={args.k} lanes, "
+          f"c={args.c} elements\n")
+    print(f"{'op':10s} {'algorithm':10s} {'rounds':>6s} {'ports':>5s} "
+          f"{'hydra us':>12s} {'tpu us':>12s}")
+    rows = [
+        ("broadcast", "kported", S.kported_broadcast(topo.p, args.k, args.c)),
+        ("broadcast", "klane", S.klane_broadcast(topo, args.k, args.c)),
+        ("broadcast", "fulllane", S.fulllane_broadcast(topo, args.c)),
+        ("scatter", "kported", S.kported_scatter(topo.p, args.k, args.c // topo.p + 1)),
+        ("scatter", "klane", S.klane_scatter(topo, args.k, args.c // topo.p + 1)),
+        ("scatter", "fulllane", S.fulllane_scatter(topo, args.c // topo.p + 1)),
+        ("alltoall", "kported", S.kported_alltoall(topo.p, args.k, max(1, args.c // topo.p))),
+        ("alltoall", "bruck", S.bruck_alltoall(topo.p, args.k, max(1, args.c // topo.p))),
+        ("alltoall", "klane", S.klane_alltoall(topo, max(1, args.c // topo.p))),
+        ("alltoall", "fulllane", S.fulllane_alltoall(topo, max(1, args.c // topo.p))),
+    ]
+    for op, alg, sch in rows:
+        # every schedule is verified before costing
+        if op == "broadcast":
+            S.verify_broadcast(sch)
+        elif op == "scatter":
+            S.verify_scatter(sch)
+        else:
+            S.verify_alltoall(sch)
+        th = simulate(sch, hydra).time_us
+        tt = simulate(sch, tpu).time_us
+        print(f"{op:10s} {alg:10s} {sch.num_rounds:6d} {sch.max_port_width():5d} "
+              f"{th:12.1f} {tt:12.1f}")
+
+    print("\nselector crossover (broadcast, 2-pod TPU):")
+    for size, alg, us in crossover_table("broadcast",
+                                         sizes=[1 << s for s in range(4, 26, 4)],
+                                         num_nodes=2, procs_per_node=256,
+                                         k_lanes=8):
+        print(f"  {size:>10d} elems -> {alg:10s} ({us:9.1f} us)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end training driver example: a ~100M-param llama-family model
+trained for a few hundred steps with the full production substrate —
+sharded train step on a (pod, data, model) mesh, deterministic data stream,
+async checkpointing, straggler monitor, resume.
+
+CPU note: --size tiny (~10M params) makes this minutes-scale on a laptop;
+--size 100m is the full deliverable config (same code path).
+
+  PYTHONPATH=src python examples/train_tinylm.py --size tiny --steps 60
+  PYTHONPATH=src python examples/train_tinylm.py --size 100m --steps 300
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+import jax
+
+jax.config.update("jax_num_cpu_devices", 8)  # (2,2,2) demo mesh
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import AttnConfig, LayerSpec, ModelConfig, ParallelConfig
+
+SIZES = {
+    # ~10M params: CPU-minutes scale
+    "tiny": ModelConfig(
+        name="tinylm-10m", family="dense", num_layers=4, d_model=256,
+        d_ff=1024, vocab_size=4096,
+        attn=AttnConfig(kind="gqa", num_heads=4, num_kv_heads=2, head_dim=64),
+        layer_pattern=(LayerSpec("attn", "dense"),),
+        parallel=ParallelConfig(remat=False, attn_chunk_q=64, attn_chunk_kv=64),
+    ),
+    # ~100M params: the deliverable config
+    "100m": ModelConfig(
+        name="tinylm-100m", family="dense", num_layers=12, d_model=640,
+        d_ff=2560, vocab_size=32000,
+        attn=AttnConfig(kind="gqa", num_heads=10, num_kv_heads=5, head_dim=64),
+        layer_pattern=(LayerSpec("attn", "dense"),),
+        parallel=ParallelConfig(remat=False, attn_chunk_q=128, attn_chunk_kv=128),
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=list(SIZES), default="tiny")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = SIZES[args.size]
+    print(f"[tinylm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    # reuse the production driver with our config injected
+    import repro.launch.train as T
+    import repro.configs as C
+
+    orig = C.get_smoke_config
+    C.get_smoke_config = lambda name: cfg if name == cfg.name else orig(name)
+    T.get_smoke_config = C.get_smoke_config
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="tinylm_ckpt_")
+    out = T.main([
+        "--arch", cfg.name, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--mesh", "2,2,2",
+        "--ckpt-dir", ckpt, "--ckpt-every", "20",
+        "--lr", "1e-3", "--corpus-size", "4",
+    ])
+    assert out["last_loss"] < out["first_loss"], "loss must decrease"
+    print(f"[tinylm] loss {out['first_loss']:.3f} -> {out['last_loss']:.3f} "
+          f"over {out['steps']} steps; checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

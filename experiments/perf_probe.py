@@ -1,0 +1,118 @@
+"""Perf-iteration probe: lower one cell under config variants and print the
+three roofline terms + top collective offenders.  The §Perf working tool.
+
+  PYTHONPATH=src python experiments/perf_probe.py deepseek_v2_236b train_4k \
+      [--variant baseline|opt|...] [--top 6]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import time
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch import hloanalysis as H
+from repro.launch.dryrun import build_cell, optimized_config
+from repro.launch.mesh import make_production_mesh
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def variants(cfg, mesh):
+    base = cfg
+    out = {"baseline": base, "opt": optimized_config(base, mesh)}
+    return out
+
+
+def top_offenders(txt, top=6, kind="collective"):
+    comps, entry = H._parse_computations(txt)
+    edges = defaultdict(list)
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                tm = H._TRIP_RE.search(ins.raw)
+                trip = int(tm.group(1)) if tm else 1
+                cb = H._COND_BODY_RE.search(ins.raw)
+                if cb:
+                    edges[cname] += [(cb.group(1), trip), (cb.group(2), trip)]
+            else:
+                cm = H._CALLS_RE.search(ins.raw)
+                if cm:
+                    edges[cname].append((cm.group(1), 1.0))
+    indeg = defaultdict(int)
+    for c, outs in edges.items():
+        for t, _ in outs:
+            indeg[t] += 1
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    ready = [c for c in comps if indeg[c] == 0]
+    iw = dict(indeg)
+    order = []
+    while ready:
+        c = ready.pop()
+        order.append(c)
+        for t, w in edges.get(c, ()):
+            iw[t] -= 1
+            if iw[t] == 0:
+                ready.append(t)
+    for c in order:
+        for t, w in edges.get(c, ()):
+            mult[t] += mult[c] * w
+    items = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if not m:
+            continue
+        symtab = dict(comp.params)
+        for ins in comp.instrs:
+            symtab[ins.name] = ins.result_type
+        for ins in comp.instrs:
+            k = next((c for c in H._COLL_KINDS if ins.opcode.startswith(c)), None)
+            if k:
+                ob = sum(H._type_bytes(symtab.get(o, "")) for o in ins.operands)
+                items.append((m * ob, m, ob, k, ins.raw[:110]))
+    items.sort(reverse=True)
+    return items[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--top", type=int, default=6)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cfg0 = get_config(args.arch)
+    for name, cfg in variants(cfg0, mesh).items():
+        if args.variant and name != args.variant:
+            continue
+        t0 = time.time()
+        fn, a = build_cell(cfg, SHAPES[args.shape], mesh)
+        comp = fn.lower(*a).compile()
+        txt = comp.as_text()
+        cost = H.analyze_module(txt)
+        mem = comp.memory_analysis()
+        print(f"\n=== {args.arch} {args.shape} [{name}] "
+              f"(compile {time.time()-t0:.0f}s) ===")
+        print(f"compute   {cost.flops/PEAK:10.3f} s   ({cost.flops:.3e} flops/dev)")
+        print(f"memory    {cost.hbm_bytes/HBM:10.3f} s   ({cost.hbm_bytes/2**30:.1f} GiB/dev)")
+        print(f"collect.  {cost.collective_total/LINK:10.3f} s   "
+              f"({ {k: round(v/2**30,2) for k,v in cost.collective_bytes.items()} } GiB)")
+        print(f"hbm fit:  arg+temp = "
+              f"{(mem.argument_size_in_bytes+mem.temp_size_in_bytes)/2**30:.1f} GiB")
+        print("top collectives:")
+        for tot, m, ob, kind, raw in top_offenders(txt, args.top):
+            print(f"  {tot/2**30:8.2f}GiB x{m:6.0f} {kind:18s} {raw[:90]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""The paper's contribution: k-ported vs k-lane collective algorithms.
+
+* :mod:`repro.core.topology`  — machine model (nodes x lanes, alpha-beta).
+* :mod:`repro.core.schedule`  — round-based schedule generators (§2).
+* :mod:`repro.core.simulate`  — hierarchical cost simulator (paper tables).
+* :mod:`repro.core.collectives` — shard_map TPU implementations.
+* :mod:`repro.core.selector`  — cost-model algorithm selection.
+"""
+
+from repro.core.topology import Topology, Machine, CostParams, HYDRA, TPU_V5E
+from repro.core.schedule import (
+    Schedule,
+    Round,
+    Msg,
+    ALGORITHMS,
+    kported_broadcast,
+    kported_scatter,
+    kported_alltoall,
+    bruck_alltoall,
+    klane_broadcast,
+    klane_scatter,
+    klane_alltoall,
+    fulllane_broadcast,
+    fulllane_scatter,
+    fulllane_alltoall,
+)
+from repro.core.simulate import simulate, SimResult
+from repro.core import collectives
+from repro.core.selector import select, crossover_table

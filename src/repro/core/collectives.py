@@ -1,0 +1,250 @@
+"""TPU-native (shard_map) implementations of the paper's collective families.
+
+The paper's k-lane insight maps onto a multi-pod TPU mesh as follows: the
+"compute node" is the pod (fast intra-pod ICI = the paper's shared memory),
+the k "lanes" are the concurrent inter-pod streams, and the *full-lane
+problem-splitting* family becomes the hierarchical decomposition of cross-pod
+collectives:
+
+    cross-pod allreduce  = reduce_scatter(intra) -> allreduce(pod) -> all_gather(intra)
+    cross-pod broadcast  = [payload lane-sharded on root pod] -> psum(pod) -> all_gather(intra)
+    cross-pod alltoall   = all_to_all(intra, regroup) -> all_to_all(pod)
+
+Every function here must be called INSIDE ``jax.experimental.shard_map``
+(they use named-axis collectives), mirroring how ``jax.lax.psum`` et al. are
+used.  The k-ported tree algorithms are also provided, compiled from the
+schedule generators into ``ppermute`` round programs — they exist so the
+dry-run can compare collective bytes/rounds of the paper's baseline against
+the full-lane family on identical payloads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.topology import Topology
+
+__all__ = [
+    "axis_size",
+    "hierarchical_psum",
+    "fulllane_psum",
+    "fulllane_broadcast",
+    "fulllane_all_to_all",
+    "kported_broadcast_ppermute",
+    "kported_scatter_ppermute",
+    "flat_psum",
+    "flat_all_to_all",
+]
+
+
+def axis_size(axis_name) -> int:
+    if isinstance(axis_name, (tuple, list)):
+        return int(np.prod([jax.lax.axis_size(a) for a in axis_name]))
+    return jax.lax.axis_size(axis_name)
+
+
+def _pad_to_multiple(x: jax.Array, m: int, axis: int = 0):
+    size = x.shape[axis]
+    pad = (-size) % m
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# ---------------------------------------------------------------------------
+# Full-lane (hierarchical) family — the paper's §2.2 on TPU.
+# ---------------------------------------------------------------------------
+
+
+def hierarchical_psum(x: jax.Array, outer_axis, inner_axis) -> jax.Array:
+    """All-reduce over (outer x inner) via the full-lane decomposition:
+    reduce-scatter over ``inner`` (on-node phase), all-reduce over ``outer``
+    (every inner chip drives an independent cross-pod subproblem — all lanes
+    busy), all-gather over ``inner``.
+
+    Mathematically identical to ``psum(x, (outer, inner))``; the win is that
+    the cross-pod traffic per chip drops from ``2*C`` to ``2*C/n``.
+    """
+    n = axis_size(inner_axis)
+    shape = x.shape
+    flat = x.reshape(-1)
+    flat, pad = _pad_to_multiple(flat, n)
+    part = jax.lax.psum_scatter(flat, inner_axis, scatter_dimension=0, tiled=True)
+    part = jax.lax.psum(part, outer_axis)
+    full = jax.lax.all_gather(part, inner_axis, axis=0, tiled=True)
+    if pad:
+        full = full[: flat.shape[0] - pad]
+    return full.reshape(shape)
+
+
+# The paper's name for the family:
+fulllane_psum = hierarchical_psum
+
+
+def fulllane_broadcast(x: jax.Array, outer_axis, inner_axis, *, root: int = 0) -> jax.Array:
+    """Broadcast a payload that is *valid on the root pod only* to all pods.
+
+    ``x`` is the per-device shard of a payload laid out sharded over
+    ``inner_axis`` (the paper's phase A — the on-node scatter — is the
+    sharding itself).  Phase B: each inner chip broadcasts its chunk across
+    pods (n concurrent inter-pod subproblems == full-lane).  Phase C: on-node
+    all-gather reassembles the full payload everywhere.
+
+    Returns the *full* payload (all inner shards concatenated on axis 0) on
+    every device.
+    """
+    pod = jax.lax.axis_index(outer_axis)
+    masked = jnp.where(pod == root, x, jnp.zeros_like(x))
+    seeded = jax.lax.psum(masked, outer_axis)  # chunk broadcast across pods
+    return jax.lax.all_gather(seeded, inner_axis, axis=0, tiled=True)
+
+
+def fulllane_all_to_all(x: jax.Array, outer_axis, inner_axis) -> jax.Array:
+    """Hierarchical all-to-all over the merged (outer, inner) axis.
+
+    Semantics match ``jax.lax.all_to_all(x, (outer, inner), 0, 0, tiled=True)``
+    for a per-device input of shape ``[P, ...]`` with ``P = No * Ni`` blocks
+    ordered destination-major ``dest = o * Ni + i``:  block ``x[d]`` on device
+    ``s`` ends up as output block ``s`` on device ``d``.
+
+    Paper §2.2: phase A combines blocks by destination *inner* rank with an
+    on-node (intra-pod) all-to-all; phase B delivers node-combined blocks
+    with ``Ni`` concurrent pod-level all-to-alls.  All data moves twice, but
+    the cross-pod stream count per pod is ``Ni`` (all lanes busy) and the
+    per-pod cross-pod traffic is combined into ``No`` large messages.
+    """
+    No = axis_size(outer_axis)
+    Ni = axis_size(inner_axis)
+    P = No * Ni
+    if x.shape[0] != P:
+        raise ValueError(f"leading dim {x.shape[0]} != mesh size {P}")
+    blk = x.shape[1:]
+
+    # [No, Ni, *blk], indexed by (dest_outer, dest_inner).
+    y = x.reshape((No, Ni) + blk)
+    # Phase A (on-node): exchange over inner so that device (v, l) holds the
+    # blocks of all (v, j) destined to inner rank l: split dest_inner, concat
+    # a new source_inner dimension.
+    y = jax.lax.all_to_all(y, inner_axis, split_axis=1, concat_axis=1, tiled=False)
+    # y: [No, Ni_src, *blk] — y[o, j] = block from (v, j) destined to (o, l).
+    # Phase B (cross-pod): deliver node-combined blocks; split dest_outer,
+    # concat source_outer.
+    y = jax.lax.all_to_all(y, outer_axis, split_axis=0, concat_axis=0, tiled=False)
+    # y: [No_src, Ni_src, *blk] — y[w, j] = block from (w, j) destined (v, l).
+    return y.reshape((P,) + blk)
+
+
+# ---------------------------------------------------------------------------
+# k-ported tree algorithms compiled to ppermute round programs (§2.1).
+# ---------------------------------------------------------------------------
+
+
+def _axis_linear_index(axis_names: Sequence[str]):
+    """Linear device index over possibly-multiple named axes (row-major)."""
+    if isinstance(axis_names, str):
+        return jax.lax.axis_index(axis_names)
+    idx = jax.lax.axis_index(axis_names[0])
+    for a in axis_names[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def kported_broadcast_ppermute(
+    x: jax.Array, axis_names, *, k: int, root: int = 0
+) -> jax.Array:
+    """The paper's §2.1 radix-(k+1) divide & conquer broadcast, executed as
+    ``ceil(log_{k+1} P)`` rounds of (up to k sequential) ``ppermute``s.
+
+    On a machine without true k-ported chips the k sends of a round
+    serialize — exactly the effect the paper measures; the dry-run uses this
+    to compare collective schedules, and it is the faithful baseline.
+    """
+    P = axis_size(axis_names)
+    schedule = sched.kported_broadcast(P, k, c=1, root=root)
+    me = _axis_linear_index(axis_names)
+    cur = x
+    for rnd in schedule.rounds:
+        # Each round has at most k messages per source; ppermute supports one
+        # message per source, so split the round into <= k waves.
+        waves: list[list[tuple[int, int]]] = []
+        per_src: dict[int, int] = {}
+        for m in rnd.msgs:
+            w = per_src.get(m.src, 0)
+            per_src[m.src] = w + 1
+            while len(waves) <= w:
+                waves.append([])
+            waves[w].append((m.src, m.dst))
+        for wave in waves:
+            recv = jax.lax.ppermute(cur, axis_names, perm=wave)
+            dsts = jnp.asarray([d for _, d in wave])
+            is_dst = jnp.any(me == dsts)
+            cur = jnp.where(is_dst, recv, cur)
+    return cur
+
+
+def kported_scatter_ppermute(
+    x: jax.Array, axis_names, *, k: int, root: int = 0
+) -> jax.Array:
+    """§2.1 divide & conquer scatter as ppermute rounds.
+
+    ``x``: per-device buffer of shape [P, ...]; the root's buffer holds block
+    ``j`` for device ``j`` at ``x[j]``.  Returns each device's own block
+    (shape ``x.shape[1:]``).  Intermediate devices carry their subrange's
+    blocks in a full-size buffer (XLA needs static shapes); the *collective*
+    traffic volume still shrinks per round, which is what the dry-run
+    measures via per-round message sizes in the schedule metadata.
+    """
+    P = axis_size(axis_names)
+    if x.shape[0] != P:
+        raise ValueError(f"leading dim {x.shape[0]} != axis size {P}")
+    schedule = sched.kported_scatter(P, k, c=1, root=root)
+    me = _axis_linear_index(axis_names)
+    cur = x
+    for rnd in schedule.rounds:
+        waves: list[list[tuple[int, int]]] = []
+        per_src: dict[int, int] = {}
+        for m in rnd.msgs:
+            w = per_src.get(m.src, 0)
+            per_src[m.src] = w + 1
+            while len(waves) <= w:
+                waves.append([])
+            waves[w].append((m.src, m.dst))
+        for wave in waves:
+            recv = jax.lax.ppermute(cur, axis_names, perm=wave)
+            dsts = jnp.asarray([d for _, d in wave])
+            is_dst = jnp.any(me == dsts)
+            cur = jnp.where(is_dst, recv, cur)
+    return jnp.take(cur, me, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Flat (XLA-native) baselines for comparison.
+# ---------------------------------------------------------------------------
+
+
+def flat_psum(x: jax.Array, outer_axis, inner_axis) -> jax.Array:
+    axes = []
+    for a in (outer_axis, inner_axis):
+        if isinstance(a, (tuple, list)):
+            axes.extend(a)
+        else:
+            axes.append(a)
+    return jax.lax.psum(x, tuple(axes))
+
+
+def flat_all_to_all(x: jax.Array, outer_axis, inner_axis) -> jax.Array:
+    axes = []
+    for a in (outer_axis, inner_axis):
+        if isinstance(a, (tuple, list)):
+            axes.extend(a)
+        else:
+            axes.append(a)
+    return jax.lax.all_to_all(x, tuple(axes), split_axis=0, concat_axis=0, tiled=True)

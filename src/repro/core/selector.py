@@ -1,0 +1,97 @@
+"""Cost-model-driven collective algorithm selection.
+
+The paper's conclusion is that no single family wins everywhere (k-ported
+trees win at small payloads where the full-lane pre/post phases cost extra
+rounds; full-lane wins at bandwidth-bound sizes).  Production collective
+libraries encode exactly this as a size-switched algorithm table; here the
+table is *derived from the machine model* by simulating each candidate
+schedule at the requested payload size — the "tuned collectives" layer the
+paper says native MPI libraries get wrong.
+
+``select()`` is used by the distribution layer to pick the gradient-allreduce
+and MoE-dispatch implementations per (op, payload, mesh); the choice is
+recorded so EXPERIMENTS.md can show the crossover points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core import schedule as sched
+from repro.core.simulate import simulate
+from repro.core.topology import Machine, Topology, tpu_v5e_machine
+
+__all__ = ["select", "Choice", "crossover_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    op: str
+    algorithm: str
+    est_us: float
+    candidates: tuple[tuple[str, float], ...]  # (algorithm, est_us), sorted
+
+
+def _proxy_machine(machine: Machine, max_n: int = 16) -> tuple[Machine, float]:
+    """Shrink the intra-node dimension for fast simulation; payload-per-proc
+    scaling keeps the bandwidth terms honest (round counts change only by
+    O(log) which the alpha term absorbs conservatively)."""
+    topo = machine.topo
+    if topo.procs_per_node <= max_n:
+        return machine, 1.0
+    scale = topo.procs_per_node / max_n
+    proxy = Machine(
+        topo=Topology(topo.num_nodes, max_n, min(topo.k_lanes, max_n)),
+        cost=machine.cost,
+    )
+    return proxy, scale
+
+
+@functools.lru_cache(maxsize=4096)
+def select(
+    op: str,
+    payload_elems: int,
+    *,
+    num_nodes: int = 2,
+    procs_per_node: int = 256,
+    k_lanes: int = 8,
+) -> Choice:
+    """Pick the cheapest algorithm family for ``op`` at ``payload_elems``
+    (total payload for broadcast; per-proc block for scatter; per-pair block
+    for alltoall) on the given (node, lane) machine shape."""
+    machine = tpu_v5e_machine(num_pods=num_nodes, k_lanes=k_lanes)
+    machine = Machine(
+        topo=Topology(num_nodes, procs_per_node, k_lanes), cost=machine.cost
+    )
+    proxy, scale = _proxy_machine(machine)
+    topo = proxy.topo
+    c = max(1, int(payload_elems / scale)) if op != "broadcast" else payload_elems
+
+    candidates: dict[str, float] = {}
+    for (sop, alg), gen in sched.ALGORITHMS.items():
+        if sop != op:
+            continue
+        if alg == "kported" and op == "alltoall" and topo.p > 64:
+            continue  # O(p^2/k) messages; never competitive at pod scale
+        k = min(topo.k_lanes, topo.procs_per_node)
+        try:
+            s = gen(topo, k, c)
+        except Exception:
+            continue
+        candidates[alg] = simulate(s, proxy).time_us
+
+    ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
+    best, est = ranked[0]
+    return Choice(op=op, algorithm=best, est_us=est, candidates=ranked)
+
+
+def crossover_table(op: str, sizes=None, **mesh_kw) -> list[tuple[int, str, float]]:
+    """The size-switched algorithm table for one op — EXPERIMENTS.md exhibit."""
+    if sizes is None:
+        sizes = [1 << s for s in range(0, 27, 2)]
+    out = []
+    for s in sizes:
+        ch = select(op, s, **mesh_kw)
+        out.append((s, ch.algorithm, ch.est_us))
+    return out

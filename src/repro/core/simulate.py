@@ -1,0 +1,155 @@
+"""Hierarchical alpha-beta cost simulation of round-based schedules.
+
+This is the reproduction oracle for the paper's experimental tables: the
+paper's absolute numbers are artifacts of one OmniPath cluster and three MPI
+libraries, so *reproduction* means recovering the same orderings and scaling
+behaviour of the algorithm families under a calibrated machine model.
+
+The model (paper §2.4, made concrete):
+
+* A message of ``m`` elements costs ``alpha + beta * m``; alpha/beta differ
+  for on-node (shared memory) and off-node (network) messages.
+* **Lane constraint** (the k-lane model): a node can drive at most ``k``
+  concurrent off-node streams at full rail bandwidth.  If ``M > k`` off-node
+  messages are concurrently in flight at a node, bandwidth is shared: the
+  effective beta is multiplied by ``M / k`` (paper: "bandwidth is equally
+  shared among the processors").
+* **Port constraint**: a single processor drives its messages through one
+  port.  A processor posting ``m`` non-blocking messages in a round pays one
+  alpha (software pipelining — the paper's observation that more non-blocking
+  sends are beneficial) but serializes their bytes through its port.
+* **Shared-memory cap**: the aggregate on-node traffic of a round is limited
+  by ``node_bw_elems`` (the paper's open question "how much communication can
+  the shared memory sustain?" — on Hydra, measurably less than 32 concurrent
+  full-bandwidth streams).
+* In ``ported`` mode the per-processor port constraint is lifted up to k
+  concurrent messages (the idealized k-ported machine, for theory-vs-practice
+  comparisons).
+
+Round time = max over processors and nodes of their completion terms; the
+schedule time is the sum over rounds (rounds are barrier-synchronized, which
+matches the paper's measurement loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+from repro.core.schedule import Schedule
+from repro.core.topology import Machine
+
+__all__ = ["simulate", "SimResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    time_us: float
+    rounds: int
+    inter_elems: int  # total off-node traffic
+    intra_elems: int  # total on-node traffic
+    max_node_inflight: int  # worst concurrent off-node streams at one node
+
+    def __repr__(self):
+        return (
+            f"SimResult(time={self.time_us:.2f}us rounds={self.rounds} "
+            f"inter={self.inter_elems} intra={self.intra_elems} "
+            f"inflight={self.max_node_inflight})"
+        )
+
+
+def simulate(schedule: Schedule, machine: Machine, *, ported: bool = False) -> SimResult:
+    topo, cost = machine.topo, machine.cost
+    k = topo.k_lanes
+    total_time = 0.0
+    inter_total = 0
+    intra_total = 0
+    max_inflight = 0
+
+    for rnd in schedule.rounds:
+        if not rnd.msgs:
+            continue
+        # --- classify traffic ------------------------------------------------
+        proc_send_elems: dict[int, int] = defaultdict(int)  # port serialization
+        proc_send_msgs: dict[int, int] = defaultdict(int)
+        proc_recv_elems: dict[int, int] = defaultdict(int)
+        proc_recv_msgs: dict[int, int] = defaultdict(int)
+        node_out: dict[int, int] = defaultdict(int)  # off-node elems leaving
+        node_in: dict[int, int] = defaultdict(int)
+        node_out_msgs: dict[int, int] = defaultdict(int)
+        node_in_msgs: dict[int, int] = defaultdict(int)
+        node_intra: dict[int, int] = defaultdict(int)
+        proc_send_inter: set[int] = set()  # procs with >= 1 off-node send
+        proc_recv_inter: set[int] = set()
+
+        for m in rnd.msgs:
+            sv, dv = topo.node_of(m.src), topo.node_of(m.dst)
+            if sv == dv:
+                intra_total += m.elems
+                node_intra[sv] += m.elems
+            else:
+                inter_total += m.elems
+                node_out[sv] += m.elems
+                node_in[dv] += m.elems
+                node_out_msgs[sv] += 1
+                node_in_msgs[dv] += 1
+                proc_send_inter.add(m.src)
+                proc_recv_inter.add(m.dst)
+            proc_send_elems[m.src] += m.elems
+            proc_send_msgs[m.src] += 1
+            proc_recv_elems[m.dst] += m.elems
+            proc_recv_msgs[m.dst] += 1
+
+        # --- per-processor port terms ----------------------------------------
+        # Use the slower (network) alpha/beta whenever any of a processor's
+        # traffic in the round is off-node; schedules never mix intra and
+        # inter traffic at one processor within a round in practice.
+        round_time = 0.0
+        for proc, elems in proc_send_elems.items():
+            nmsgs = proc_send_msgs[proc]
+            inter = proc in proc_send_inter
+            beta = cost.beta_inter if inter else cost.beta_intra
+            alpha = cost.alpha_inter if inter else cost.alpha_intra
+            if ported:
+                # idealized k-ported proc: k concurrent streams
+                eff = -(-nmsgs // k)  # ceil(nmsgs / k) serial batches
+                t = alpha + beta * elems / min(nmsgs, k)
+                t = max(t, alpha * eff)
+            else:
+                t = alpha + beta * elems  # one port, pipelined non-blocking
+            round_time = max(round_time, t)
+        for proc, elems in proc_recv_elems.items():
+            inter = proc in proc_recv_inter
+            beta = cost.beta_inter if inter else cost.beta_intra
+            alpha = cost.alpha_inter if inter else cost.alpha_intra
+            if ported:
+                t = alpha + beta * elems / min(proc_recv_msgs[proc], k)
+            else:
+                t = alpha + beta * elems
+            round_time = max(round_time, t)
+
+        # --- per-node lane bandwidth terms ------------------------------------
+        for v in set(node_out) | set(node_in):
+            out_e, in_e = node_out.get(v, 0), node_in.get(v, 0)
+            streams = max(node_out_msgs.get(v, 0), node_in_msgs.get(v, 0))
+            max_inflight = max(max_inflight, streams)
+            # k full-duplex rails; if more streams than lanes, bytes queue.
+            t = cost.alpha_inter + cost.beta_inter * max(out_e, in_e) / min(
+                max(streams, 1), k
+            )
+            round_time = max(round_time, t)
+
+        # --- shared-memory aggregate cap --------------------------------------
+        for v, elems in node_intra.items():
+            t = cost.alpha_intra + elems / cost.node_bw_elems
+            round_time = max(round_time, t)
+
+        total_time += round_time
+
+    return SimResult(
+        time_us=total_time,
+        rounds=schedule.num_rounds,
+        inter_elems=inter_total,
+        intra_elems=intra_total,
+        max_node_inflight=max_inflight,
+    )

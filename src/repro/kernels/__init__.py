@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three artifacts (per the repo convention):
+  <name>.py  — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+  ops.py     — jitted public wrapper (interpret=True off-TPU),
+  ref.py     — pure-jnp oracle used by the allclose test sweeps.
+"""
+
+from repro.kernels import ops, ref

@@ -1,0 +1,41 @@
+"""Pallas TPU lane-major block pack for the hierarchical all-to-all.
+
+The paper's on-node phase of the full-lane alltoall regroups each
+processor's blocks by destination *lane* before the cross-node exchange.
+On TPU this is the local ``[No, Ni, blk, d] -> [Ni, No, blk, d]`` block
+transpose that sits on either side of the two ``lax.all_to_all`` phases in
+``repro.core.collectives.fulllane_all_to_all``.  XLA usually fuses this
+copy; the kernel exists to make the data movement explicit and VMEM-tiled
+(one (blk, d) tile per grid step, so arbitrary No*Ni fan-outs stream
+through VMEM instead of materializing a transposed HBM temp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["a2a_pack_kernel", "a2a_pack_pallas"]
+
+
+def a2a_pack_kernel(x_ref, o_ref):
+    # x block: [1, 1, blk, d] at (o, i); written to (i, o).
+    o_ref[...] = x_ref[...]
+
+
+def a2a_pack_pallas(
+    x: jax.Array,  # [No, Ni, blk, d]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns x with the leading two (destination-group) dims swapped."""
+    No, Ni, blk, d = x.shape
+    return pl.pallas_call(
+        a2a_pack_kernel,
+        grid=(No, Ni),
+        in_specs=[pl.BlockSpec((1, 1, blk, d), lambda o, i: (o, i, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, blk, d), lambda o, i: (i, o, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Ni, No, blk, d), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,143 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Tiling: the grid is ``(batch * num_q_heads, num_q_blocks, num_kv_blocks)``
+with the KV-block dimension innermost — TPU executes the grid sequentially
+in that dimension, so the online-softmax state (m, l, acc) lives in VMEM
+scratch and persists across KV iterations; the output block is written on
+the last KV step.  GQA is handled in the index maps: the K/V block for
+q-head ``h`` comes from kv-head ``h // group_size``.
+
+Block shapes are MXU-aligned: q/kv block sizes default to 512/512 rows and
+the full head_dim (a multiple of 128 for all assigned archs except danube's
+120, which ops.py pads to 128).  VMEM footprint per grid step is roughly
+``(bq + 2*bk)*hd + bq*bk`` fp32 words — ~2.3 MB at (512, 512, 128) — well
+inside the ~16 MB/core VMEM budget with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref,  # [1, bq, hd], [1, bk, hd], [1, bk, hd]
+    o_ref,  # [1, bq, hd]
+    m_scr, l_scr, acc_scr,  # VMEM scratch: [bq, 1], [bq, 1], [bq, hd]
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+    window: int | None,
+    causal: bool,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Skip KV blocks strictly above the causal frontier / outside the window.
+    needed = jnp.bool_(True)
+    if causal:
+        needed = jnp.logical_and(needed, k_start <= q_start + block_q - 1)
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 >= q_start - window + 1
+        )
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        if causal:
+            mask = kp <= qp
+        else:
+            mask = jnp.full((block_q, block_k), True)
+        if window is not None:
+            mask = jnp.logical_and(mask, kp > qp - window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # [BH, Sq, hd]   (batch x q-heads flattened)
+    k: jax.Array,  # [BHkv, Skv, hd]
+    v: jax.Array,  # [BHkv, Skv, hd]
+    *,
+    group_size: int,  # q-heads per kv-head
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    if Sq % block_q or Skv % block_k:
+        raise ValueError(f"seq {Sq}/{Skv} not divisible by blocks {block_q}/{block_k}")
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    g = group_size
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        scale=scale, block_q=block_q, block_k=block_k,
+        num_kv_blocks=nk, window=window, causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "mamba_scan_ref", "rmsnorm_ref", "a2a_pack_ref"]
+
+_NEG = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [BH, Sq, hd]
+    k: jax.Array,  # [BHkv, Skv, hd]
+    v: jax.Array,
+    *,
+    group_size: int,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, group_size, axis=0)
+    vv = jnp.repeat(v, group_size, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = kp <= qp if causal else jnp.full((Sq, Skv), True)
+    if window is not None:
+        mask = jnp.logical_and(mask, kp > qp - window)
+    s = jnp.where(mask[None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(
+    a: jax.Array,  # [B, S, di, N]
+    b: jax.Array,
+    c: jax.Array,  # [B, S, N]
+) -> tuple[jax.Array, jax.Array]:
+    def step(h, xs):
+        a_t, b_t, c_t = xs
+        h = a_t * h + b_t  # [B, di, N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    B, S, di, N = a.shape
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1))
+    )
+    return ys.swapaxes(0, 1), hT  # [B, S, di], [B, di, N]
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def a2a_pack_ref(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, 0, 1)

@@ -1,0 +1,134 @@
+"""Abstract input specs and shardings for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no allocation) for the step function the shape kind
+lowers:
+
+  train_4k     -> train_step(params, opt_state, batch)
+  prefill_32k  -> prefill(params, batch)
+  decode_32k / long_500k -> decode_step(params, tokens, cache, cache_pos)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm
+from repro.training.train_step import dp_axes, mesh_axis_sizes
+
+__all__ = [
+    "batch_structs",
+    "decode_token_struct",
+    "cache_pspecs",
+    "batch_pspecs",
+    "named",
+    "cell_eligible",
+]
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Training/prefill batch ShapeDtypeStructs."""
+    if cfg.embed_inputs:
+        shape = (batch, seq, cfg.num_codebooks) if cfg.num_codebooks > 1 \
+            else (batch, seq)
+        out = {"tokens": jax.ShapeDtypeStruct(shape, jnp.int32),
+               "labels": jax.ShapeDtypeStruct(shape, jnp.int32)}
+    else:
+        out = {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.dtype(cfg.dtype)),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+        if cfg.attn is not None and cfg.attn.mrope_sections is not None:
+            out["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+    return out
+
+
+def decode_token_struct(cfg: ModelConfig, batch: int):
+    if cfg.embed_inputs:
+        shape = (batch, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 \
+            else (batch, 1)
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+    return jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def _dp_or_none(mesh: Mesh, dim: int):
+    dp = dp_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    n = math.prod(sizes[a] for a in dp)
+    return dp if dim % n == 0 and dim > 0 else None
+
+
+def batch_pspecs(mesh: Mesh, tree) -> Any:
+    """Shard the leading (batch) dim of every leaf over the DP axes when
+    divisible (long_500k's batch=1 stays replicated)."""
+    def spec(leaf):
+        dp = _dp_or_none(mesh, leaf.shape[0])
+        return P(dp) if dp else P()
+    return jax.tree.map(spec, tree)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_struct) -> Any:
+    """PartitionSpecs for decode caches.
+
+    Rules (per DESIGN.md §5): batch dim over the DP axes when divisible;
+    the ``model`` axis lands on kv-heads when divisible (comm-free decode),
+    else on the cache sequence dim (flash-decode style distributed softmax,
+    inserted by GSPMD); mamba states shard d_inner over ``model``."""
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        stacked = keys[0] == "blocks"  # stacked-over-periods leading dim
+        name = keys[-1]
+        nd = len(leaf.shape)
+        specs: list = [None] * nd
+        b_idx = 1 if stacked else 0  # blocks/<slot>/<name>: [periods, B, ...]
+        dp = _dp_or_none(mesh, leaf.shape[b_idx])
+        if dp:
+            specs[b_idx] = dp
+        if name in ("k", "v"):
+            # [..., B, C, Hkv, hd]
+            if leaf.shape[-2] % m == 0:
+                specs[-2] = "model"
+            elif leaf.shape[-3] % m == 0:
+                specs[-3] = "model"
+        elif name in ("ckv", "krope"):
+            # [..., B, C, r] — shard the cache sequence dim
+            if leaf.shape[-2] % m == 0:
+                specs[-2] = "model"
+        elif name == "conv":
+            if leaf.shape[-1] % m == 0:
+                specs[-1] = "model"
+        elif name == "ssm":
+            if leaf.shape[-2] % m == 0:
+                specs[-2] = "model"
+        while specs and specs[-1] is None:
+            specs.pop()
+        return P(*specs)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_struct)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cell_eligible(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (SSM / hybrid / SWA)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "skipped: pure full-attention arch; 524288-token dense KV decode "
+            "is excluded per the assignment (DESIGN.md §4)"
+        )
+    return True, ""

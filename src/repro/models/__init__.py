@@ -1,0 +1,12 @@
+"""Model zoo substrate: attention/MoE/Mamba mixers and the decoder LM."""
+
+from repro.models.lm import (
+    model_meta,
+    init_model,
+    abstract_model,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+    abstract_cache,
+)

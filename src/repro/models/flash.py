@@ -1,0 +1,162 @@
+"""Memory-lean training attention: custom-VJP chunked flash attention.
+
+Plain autodiff of the chunked online-softmax loop stores per-KV-chunk
+scores and masks as while-loop residuals — the compiled train step carried
+multi-GB ``pred[nk, L, ...]``/``f32[..., 512, 512]`` stacks (observed in
+the dry-run HLO).  The classic flash-attention factorization fixes this:
+
+  forward : save only ``out`` and the per-row logsumexp ``lse``;
+  backward: recompute scores chunk-by-chunk and accumulate
+            dq, dk, dv (plus the ``delta = rowsum(dout * out)`` trick).
+
+Assumes the aligned training layout (``q_pos == arange(Sq)``, same Skv)
+— exactly what the model's train path uses.  Causal-skip bounds are static
+per (unrolled) q chunk, so the ~2x FLOP saving survives in both passes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_train"]
+
+_NEG = -1e30
+
+
+def _bounds(i: int, cq: int, ck: int, nk: int, window: int | None,
+            causal_skip: bool) -> tuple[int, int]:
+    if not causal_skip:
+        return 0, nk
+    ub = min(nk, ((i + 1) * cq - 1) // ck + 1)
+    lb = 0 if window is None else max(0, (i * cq - window + 1) // ck)
+    return lb, ub
+
+
+def _mask(qp, kp, window):
+    m = kp[None, :] <= qp[:, None]
+    if window is not None:
+        m &= kp[None, :] > qp[:, None] - window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_train(
+    q: jax.Array,  # [B, Sq, Hkv, G, hd]
+    k: jax.Array,  # [B, Skv, Hkv, hd]
+    v: jax.Array,  # [B, Skv, Hkv, hd]
+    scale: float,
+    window: int | None,
+    chunk_q: int,
+    chunk_kv: int,
+    causal_skip: bool,
+) -> jax.Array:
+    out, _ = _fwd_impl(q, k, v, scale, window, chunk_q, chunk_kv, causal_skip)
+    return out
+
+
+def _fwd_impl(q, k, v, scale, window, cq, ck, causal_skip):
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    hdv = v.shape[-1]
+    cq = min(cq, Sq)
+    ck = min(ck, Skv)
+    nq, nk = Sq // cq, Skv // ck
+
+    outs, lses = [], []
+    for i in range(nq):
+        qc = q[:, i * cq : (i + 1) * cq]  # [B, cq, Hkv, G, hd]
+        qp = i * cq + jnp.arange(cq)
+        lb, ub = _bounds(i, cq, ck, nk, window, causal_skip)
+        m0 = jnp.full((B, Hkv, G, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, hdv), jnp.float32)
+
+        def body(j, st, qc=qc, qp=qp):
+            m, l, acc = st
+            kc = jax.lax.dynamic_slice(k, (0, j * ck, 0, 0), (B, ck, Hkv, hd))
+            vc = jax.lax.dynamic_slice(v, (0, j * ck, 0, 0), (B, ck, Hkv, hdv))
+            kp = j * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(qp, kp, window)[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc, preferred_element_type=jnp.float32)
+            return m_new, l, acc
+
+        m, l, acc = jax.lax.fori_loop(lb, ub, body, (m0, l0, a0))
+        l = jnp.maximum(l, 1e-30)
+        outs.append((acc / l[..., None]).astype(q.dtype))  # [B,Hkv,G,cq,hdv]
+        lses.append(m + jnp.log(l))  # [B, Hkv, G, cq]
+    out = jnp.concatenate([o.transpose(0, 3, 1, 2, 4) for o in outs], axis=1)
+    lse = jnp.concatenate(lses, axis=-1)  # [B, Hkv, G, Sq]
+    return out, lse  # out: [B, Sq, Hkv, G, hdv]
+
+
+def _fwd(q, k, v, scale, window, cq, ck, causal_skip):
+    out, lse = _fwd_impl(q, k, v, scale, window, cq, ck, causal_skip)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(scale, window, cq, ck, causal_skip, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    hdv = v.shape[-1]
+    cq = min(cq, Sq)
+    ck = min(ck, Skv)
+    nq, nk = Sq // cq, Skv // ck
+
+    # delta[b,h,g,q] = rowsum(dout * out)
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    dq = jnp.zeros(q.shape, jnp.float32)
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+
+    for i in range(nq):
+        sl = slice(i * cq, (i + 1) * cq)
+        qc = q[:, sl]
+        doc = dout[:, sl].transpose(0, 2, 3, 1, 4).astype(jnp.float32)  # [B,Hkv,G,cq,hdv]
+        lsec = lse[..., sl]  # [B,Hkv,G,cq]
+        dlc = delta[..., sl]
+        qp = i * cq + jnp.arange(cq)
+        lb, ub = _bounds(i, cq, ck, nk, window, causal_skip)
+
+        def body(j, st, qc=qc, doc=doc, lsec=lsec, dlc=dlc, qp=qp):
+            dq_c, dk_a, dv_a = st
+            kc = jax.lax.dynamic_slice(k, (0, j * ck, 0, 0), (B, ck, Hkv, hd))
+            vc = jax.lax.dynamic_slice(v, (0, j * ck, 0, 0), (B, ck, Hkv, hdv))
+            kp = j * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(qp, kp, window)[None, None, None], s, _NEG)
+            p = jnp.exp(s - lsec[..., None])  # softmax probs, recomputed
+            # dv += p^T @ dout  (sum over the G query heads per kv head)
+            dv_c = jnp.einsum("bhgqk,bhgqd->bkhd", p, doc)
+            old_v = jax.lax.dynamic_slice(dv_a, (0, j * ck, 0, 0), (B, ck, Hkv, hdv))
+            dv_a = jax.lax.dynamic_update_slice(dv_a, old_v + dv_c, (0, j * ck, 0, 0))
+            # dp / ds
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", doc, vc)
+            ds = p * (dp - dlc[..., None]) * scale
+            dq_c = dq_c + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc)
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc.astype(jnp.float32))
+            old_k = jax.lax.dynamic_slice(dk_a, (0, j * ck, 0, 0), (B, ck, Hkv, hd))
+            dk_a = jax.lax.dynamic_update_slice(dk_a, old_k + dk_c, (0, j * ck, 0, 0))
+            return dq_c, dk_a, dv_a
+
+        dq_c0 = jnp.zeros((B, cq, Hkv, G, hd), jnp.float32)
+        dq_c, dk, dv = jax.lax.fori_loop(lb, ub, body, (dq_c0, dk, dv))
+        dq = dq.at[:, sl].set(dq_c)
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_train.defvjp(_fwd, _bwd)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+The dispatch/combine data movement here is *the paper's alltoall*: with
+experts sharded over the ``model`` axis (and pods as DP replicas), routing
+tokens to experts is an all-to-all whose cross-pod component the k-lane /
+full-lane algorithms accelerate.  The default formulation is scatter-based
+(GSPMD partitions the [E, C, D] buffers over ``model``); the explicit-EP
+mode in :mod:`repro.training.train_step` routes the same buffers through
+``repro.core.collectives.fulllane_all_to_all`` inside a shard_map island.
+
+Routing: softmax -> top-k, normalized weights; capacity ``C = ceil(T * k /
+E * cf)`` with overflow drop (tokens beyond capacity fall back to the
+residual stream).  A load-balance auxiliary loss (Switch-style) is returned
+for the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamMeta
+
+__all__ = ["moe_meta", "moe", "dense_ffn_flops"]
+
+
+def moe_meta(cfg: ModelConfig) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    f = e.d_ff_expert
+    out = {
+        "router": ParamMeta((d, e.num_experts), ("d_model", "experts")),
+        "w_gate": ParamMeta((e.num_experts, d, f), ("experts", "d_model", "ff")),
+        "w_up": ParamMeta((e.num_experts, d, f), ("experts", "d_model", "ff")),
+        "w_down": ParamMeta((e.num_experts, f, d), ("experts", "ff", "d_model")),
+    }
+    if e.num_shared_experts:
+        fs = f * e.num_shared_experts
+        out["shared_gate"] = ParamMeta((d, fs), ("d_model", "ff"))
+        out["shared_up"] = ParamMeta((d, fs), ("d_model", "ff"))
+        out["shared_down"] = ParamMeta((fs, d), ("ff", "d_model"))
+    return out
+
+
+def _capacity(tokens: int, e) -> int:
+    cap = int(tokens * e.top_k / e.num_experts * e.capacity_factor)
+    return max(cap, e.top_k)
+
+
+def moe(cfg: ModelConfig, p: dict, x: jax.Array,
+        act_shard=None) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Dispatch is *group-local*: tokens are split into ``parallel.moe_groups``
+    groups (set to the DP world size by the step factories) and capacity
+    slots are computed within each group, so the [G, E, C_g, D] buffers are
+    sharded G-over-DP and E-over-model with no cross-shard scatter.  The
+    global-cumsum formulation (groups=1) made GSPMD all-reduce the whole
+    [E, C, D] buffer across the data axis — the dominant collective in the
+    baseline deepseek dry-run (EXPERIMENTS.md §Perf iteration 1)."""
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = max(1, cfg.parallel.moe_groups)
+    if T % G:
+        G = 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+    E, K = e.num_experts, e.top_k
+    C = _capacity(Tg, e)
+    # NOTE (§Perf iteration 2, refuted): explicit sharding hints on the
+    # dispatch buffers ([G,E,C,D] G-over-DP, E-over-model with D replicated)
+    # force f32 gradient all-reduces of the un-sharded D dimension — 13x
+    # worse collective volume than GSPMD's own propagation.  Hints removed.
+
+    # ---- routing ----
+    logits = (xt @ p["router"]).astype(jnp.float32)  # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)  # [G, Tg, K]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    # §Perf iteration 3 (refuted): dropping gate weights to bf16 here was
+    # hypothesized to halve the combine-path collective volume; measured
+    # effect was zero — the fp32 [T*K, D/tp] all-reduces come from XLA's
+    # internal fp32 accumulation of the backward scatter-add, which operand
+    # dtypes don't control.  The cast stays (free, and keeps the combine
+    # multiply in the model dtype).
+    gate_w = gate_w.astype(x.dtype)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    assign1 = jax.nn.one_hot(gate_i[..., 0], E, dtype=jnp.float32)
+    f_e = assign1.mean((0, 1))
+    P_e = probs.mean((0, 1))
+    aux = E * jnp.sum(f_e * P_e) * e.router_aux_weight
+
+    # ---- capacity slots: position among the expert's tokens *within the
+    # group* (prefix count over the group's Tg*K assignment slots) ----
+    flat_e = gate_i.reshape(G, Tg * K)  # token-major per group
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [G, Tg*K, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+    w_flat = jnp.where(keep, gate_w.reshape(G, Tg * K), 0.0)
+
+    # ---- dispatch: group-local scatter into [G, E, C, D] ----
+    xk = jnp.repeat(xt, K, axis=1)  # [G, Tg*K, D]
+    buf = jnp.zeros((G, E, C, D), x.dtype)
+    gidx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tg * K))
+    buf = buf.at[gidx, flat_e, slot].add(
+        jnp.where(keep[..., None], xk, 0).astype(x.dtype)
+    )
+
+    # ---- expert FFN (SwiGLU) ----
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, p["w_down"])
+
+    # ---- combine: group-local gather and weight ----
+    yk = y[gidx, flat_e, slot]  # [G, Tg*K, D]
+    yk = yk * w_flat[..., None].astype(y.dtype)
+    out = yk.reshape(G, Tg, K, D).sum(axis=2)
+
+    # ---- always-on shared experts (DeepSeek) ----
+    if e.num_shared_experts:
+        sg = jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_up"])
+        out = out + sg @ p["shared_down"]
+    return out.reshape(B, S, D), aux
+
+
+def dense_ffn_flops(cfg: ModelConfig, tokens: int) -> int:
+    """Active-parameter matmul FLOPs of one MoE layer (roofline bookkeeping)."""
+    e = cfg.moe
+    per_tok = (e.top_k + e.num_shared_experts) * 3 * cfg.d_model * e.d_ff_expert
+    return 2 * tokens * per_tok

@@ -1,0 +1,154 @@
+"""Batched serving engine: slot-based continuous batching over a fixed-size
+decode batch.
+
+``ServeEngine`` keeps ``num_slots`` independent sequences in one KV cache;
+requests are admitted into free slots (prefill), all active slots decode in
+lock-step (one ``decode_step`` per iteration — the shape the decode_32k /
+long_500k dry-run cells lower), and finished sequences free their slot.
+
+For simplicity each slot tracks its own length; attention masking uses the
+global ``cache_pos`` per slot via per-slot position offsets — on this
+framework's synchronized-decode cache (scalar cache_pos), admission pads
+the new prompt to the current step so all slots share the write index, the
+standard static-batching compromise (documented; per-slot paged caches are
+the next step and orthogonal to the paper's collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+__all__ = ["Request", "ServeEngine", "greedy_sample", "temperature_sample"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32 (or [S, K] codebooks; [S, D] embeds)
+    max_new_tokens: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def greedy_sample(logits: jax.Array, rng=None) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(temp: float) -> Callable:
+    def fn(logits, rng):
+        return jax.random.categorical(rng, logits / temp, axis=-1).astype(jnp.int32)
+
+    return fn
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        num_slots: int = 4,
+        capacity: int = 512,
+        sampler: Callable = greedy_sample,
+        seed: int = 0,
+    ):
+        if not cfg.embed_inputs:
+            raise ValueError("serving engine drives token models")
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.capacity = capacity
+        self.sampler = sampler
+        self.rng = jax.random.PRNGKey(seed)
+        self.slots: list[Request | None] = [None] * num_slots
+        self.cache = None
+        self.pos = 0  # synchronized cache position
+
+        self._decode = jax.jit(
+            lambda p, t, c, i: lm.decode_step(cfg, p, t, c, i)
+        )
+
+    # ------------------------------------------------------------------
+    def _tok_shape(self, n: int):
+        k = self.cfg.num_codebooks
+        return (self.num_slots, n, k) if k > 1 else (self.num_slots, n)
+
+    def admit(self, requests: list[Request]) -> list[Request]:
+        """Fill free slots; prefill runs over the padded batch of prompts.
+        Returns the admitted subset."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admitted = requests[: len(free)]
+        if not admitted:
+            return []
+        max_len = max(len(r.prompt) for r in admitted)
+        start = self.pos
+        toks = np.zeros(self._tok_shape(start + max_len), np.int32)
+        for slot, req in zip(free, admitted):
+            p = np.asarray(req.prompt)
+            toks[slot, start + max_len - len(p):start + max_len] = p
+            self.slots[slot] = req
+        lgts, cache = jax.jit(
+            lambda p, b: lm.prefill(self.cfg, p, b, capacity=self.capacity)
+        )(self.params, {"tokens": jnp.asarray(toks)})
+        self.cache = cache
+        self.pos = start + max_len
+        # first sampled token from prefill logits
+        self.rng, k = jax.random.split(self.rng)
+        nxt = np.asarray(self.sampler(lgts, k))
+        for slot, req in zip(free, admitted):
+            req.out_tokens.append(nxt[slot].tolist())
+        self._pending = jnp.asarray(
+            nxt.reshape(self._tok_shape(1))
+        )
+        return admitted
+
+    def step(self) -> None:
+        """One lock-step decode for all active slots."""
+        if self.cache is None or self.pos >= self.capacity:
+            return
+        lgts, self.cache = self._decode(
+            self.params, self._pending, self.cache, jnp.int32(self.pos)
+        )
+        self.pos += 1
+        self.rng, k = jax.random.split(self.rng)
+        nxt = np.asarray(self.sampler(lgts, k))
+        self._pending = jnp.asarray(nxt.reshape(self._tok_shape(1)))
+        for slot, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            req.out_tokens.append(nxt[slot].tolist())
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+
+    def drain(self) -> list[Request]:
+        """Release finished requests from their slots."""
+        out = []
+        for i, req in enumerate(self.slots):
+            if req is not None and req.done:
+                out.append(req)
+                self.slots[i] = None
+        return out
+
+    def run(self, requests: list[Request], *, max_steps: int = 256) -> list[Request]:
+        """Convenience driver: admit everything (in waves), decode to done."""
+        pending = list(requests)
+        finished: list[Request] = []
+        steps = 0
+        while (pending or any(s is not None for s in self.slots)) and steps < max_steps:
+            if pending and any(s is None for s in self.slots) and self.cache is None:
+                n = self.admit(pending)
+                pending = pending[len(n):]
+            self.step()
+            finished.extend(self.drain())
+            steps += 1
+            if not any(s is not None and not s.done for s in self.slots) and not pending:
+                break
+        return finished

@@ -1,0 +1,111 @@
+"""Fault-tolerance control logic: straggler detection, failure handling and
+elastic re-meshing plans.
+
+This is the *decision layer* — pure, unit-testable logic that a multihost
+launcher consults.  The mechanisms it drives already exist elsewhere in the
+framework and are what make its decisions cheap to execute:
+
+* restart-from-checkpoint: atomic committed checkpoints
+  (:mod:`repro.training.checkpoint`) + a step-keyed deterministic data
+  stream (:mod:`repro.training.data`) mean *any* re-meshed job resumes
+  bit-consistently;
+* re-meshing: train steps are (re)built from ``(config, mesh)`` factories
+  (:mod:`repro.training.train_step`) so shrinking the ``data`` axis is a
+  re-lower, not a code path;
+* straggler mitigation: a per-step deadline (EMA * factor).  On TPU pods a
+  straggling host is detected by the coordinator barrier timing out; the
+  policy below decides between wait / skip-and-log / evict-and-remesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["StragglerMonitor", "plan_remesh", "RemeshPlan"]
+
+
+class StragglerMonitor:
+    """EMA-based per-step deadline.  ``observe`` returns an action:
+    "ok", "warn" (late but under hard limit), or "evict" (the host exceeded
+    the hard multiple ``evict_factor`` times in a row)."""
+
+    def __init__(self, *, ema_decay: float = 0.9, warn_factor: float = 1.5,
+                 evict_factor: float = 3.0, patience: int = 3):
+        self.ema_decay = ema_decay
+        self.warn_factor = warn_factor
+        self.evict_factor = evict_factor
+        self.patience = patience
+        self.ema: float | None = None
+        self.strikes = 0
+        self.warnings = 0
+
+    def deadline(self) -> float | None:
+        return None if self.ema is None else self.ema * self.warn_factor
+
+    def observe(self, step_seconds: float) -> str:
+        if self.ema is None:
+            self.ema = step_seconds
+            return "ok"
+        action = "ok"
+        if step_seconds > self.ema * self.evict_factor:
+            self.strikes += 1
+            action = "evict" if self.strikes >= self.patience else "warn"
+        elif step_seconds > self.ema * self.warn_factor:
+            self.warnings += 1
+            self.strikes = 0
+            action = "warn"
+        else:
+            self.strikes = 0
+        # stragglers must not poison the baseline: clamp EMA update
+        obs = min(step_seconds, self.ema * self.warn_factor)
+        self.ema = self.ema * self.ema_decay + obs * (1 - self.ema_decay)
+        return action
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    """What the launcher should do after losing ``failed_pods`` pods /
+    ``failed_hosts`` hosts."""
+
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    global_batch: int  # keep per-device batch constant => shrink global
+    restart_step: int
+    feasible: bool
+    note: str = ""
+
+
+def plan_remesh(
+    *,
+    num_pods: int,
+    pods_lost: int,
+    data_axis: int,
+    model_axis: int,
+    global_batch: int,
+    last_committed_step: int,
+) -> RemeshPlan:
+    """Elastic policy: pods are DP replicas, so losing pods shrinks the
+    ``pod`` axis (never the ``model`` axis — parameters are sharded over it
+    and re-sharding mid-run would need a full repartition).  Batch scales
+    with the surviving DP capacity so per-device memory/compute (and thus
+    the compiled executable shape per pod) is unchanged."""
+    healthy = num_pods - pods_lost
+    if healthy < 1:
+        return RemeshPlan((), (), 0, last_committed_step, False,
+                          "no healthy pods")
+    scale = healthy / num_pods
+    new_batch = max(1, int(global_batch * scale))
+    if healthy == 1:
+        shape = (data_axis, model_axis)
+        axes = ("data", "model")
+    else:
+        shape = (healthy, data_axis, model_axis)
+        axes = ("pod", "data", "model")
+    return RemeshPlan(
+        mesh_shape=shape,
+        mesh_axes=axes,
+        global_batch=new_batch,
+        restart_step=last_committed_step,
+        feasible=True,
+        note=f"{healthy}/{num_pods} pods; global batch {global_batch}->{new_batch}",
+    )

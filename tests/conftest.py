@@ -1,0 +1,5 @@
+import jax
+
+# 8 virtual CPU devices for the shard_map / pjit distribution tests.
+# (The 512-device override is dryrun.py-only, per the launch design.)
+jax.config.update("jax_num_cpu_devices", 8)

@@ -1,0 +1,85 @@
+"""Checkpoint atomicity, async writer, GC, restore-with-shardings."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.training import checkpoint as C
+
+
+@pytest.fixture
+def params():
+    cfg = get_smoke_config("yi_6b")
+    return lm.init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        xb = np.asarray(x).view(np.uint16) if x.dtype == jnp.bfloat16 else np.asarray(x)
+        yb = np.asarray(y).view(np.uint16) if y.dtype == jnp.bfloat16 else np.asarray(y)
+        np.testing.assert_array_equal(xb, yb)
+
+
+def test_roundtrip(tmp_path, params):
+    d = str(tmp_path)
+    C.save(d, 7, params, extra={"note": "x"})
+    like = jax.eval_shape(lambda: params)
+    got, extra = C.restore(d, 7, like)
+    _trees_equal(params, got)
+    assert extra == {"note": "x"}
+
+
+def test_latest_ignores_uncommitted(tmp_path, params):
+    d = str(tmp_path)
+    C.save(d, 1, params)
+    # fake a torn write: directory without COMMIT
+    os.makedirs(os.path.join(d, "step_000000009", "arrays"))
+    assert C.latest_step(d) == 1
+
+
+def test_gc_keeps_last(tmp_path, params):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        C.save(d, s, params, keep_last=2)
+    assert C.committed_steps(d) == [3, 4]
+
+
+def test_async_checkpointer(tmp_path, params):
+    d = str(tmp_path)
+    ac = C.AsyncCheckpointer(d, keep_last=3)
+    for s in (10, 20):
+        ac.save(s, params)
+    ac.wait()
+    assert C.committed_steps(d) == [10, 20]
+    like = jax.eval_shape(lambda: params)
+    got, _ = C.restore(d, 20, like)
+    _trees_equal(params, got)
+
+
+def test_restore_with_shardings(tmp_path, params):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path)
+    C.save(d, 1, params)
+    mesh = jax.make_mesh((8,), ("data",))
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    like = jax.eval_shape(lambda: params)
+    got, _ = C.restore(d, 1, like, shardings=shardings)
+    _trees_equal(params, got)
+
+
+def test_shape_mismatch_raises(tmp_path, params):
+    d = str(tmp_path)
+    C.save(d, 1, params)
+    bad = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((s.shape[0] + 1,) + s.shape[1:], s.dtype),
+        jax.eval_shape(lambda: params),
+    )
+    with pytest.raises(ValueError):
+        C.restore(d, 1, bad)

@@ -1,0 +1,67 @@
+"""Hierarchical collectives across mesh factorizations of 8 devices —
+the full-lane decomposition must be exact for any (outer, inner) split."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as C
+
+pytestmark = pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+
+SHAPES = [(2, 4), (4, 2), (8, 1), (1, 8)]
+
+
+def _mesh(shape):
+    return jax.make_mesh(shape, ("pod", "lane"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_hierarchical_psum_all_factorizations(shape):
+    mesh = _mesh(shape)
+    x = np.random.RandomState(0).randn(8, 13).astype(np.float32)
+    sm = lambda f: jax.jit(shard_map(
+        f, mesh=mesh, in_specs=P(("pod", "lane")), out_specs=P(("pod", "lane"))))
+    got = sm(lambda v: C.hierarchical_psum(v, "pod", "lane"))(x)
+    want = sm(lambda v: C.flat_psum(v, "pod", "lane"))(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 4), (4, 2)])
+def test_fulllane_a2a_all_factorizations(shape):
+    mesh = _mesh(shape)
+    x = np.random.RandomState(1).randn(8, 8, 5).astype(np.float32)
+    sm = lambda f: jax.jit(shard_map(
+        f, mesh=mesh, in_specs=P(("pod", "lane")), out_specs=P(("pod", "lane"))))
+    got = sm(lambda v: C.fulllane_all_to_all(v[0], "pod", "lane")[None])(x)
+    want = sm(lambda v: C.flat_all_to_all(v[0], "pod", "lane")[None])(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hierarchical_psum_dtypes(dtype):
+    mesh = _mesh((2, 4))
+    x = jnp.asarray(np.random.RandomState(2).randn(8, 16), dtype)
+    sm = lambda f: jax.jit(shard_map(
+        f, mesh=mesh, in_specs=P(("pod", "lane")), out_specs=P(("pod", "lane"))))
+    got = sm(lambda v: C.hierarchical_psum(v, "pod", "lane"))(x)
+    want = sm(lambda v: C.flat_psum(v, "pod", "lane"))(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_kported_broadcast_nonzero_root():
+    mesh = _mesh((2, 4))
+    x = np.full((8, 4), -1.0, np.float32)
+    x[5] = np.arange(4) + 1.0  # root device 5
+    sm = jax.jit(shard_map(
+        lambda v: C.kported_broadcast_ppermute(v[0], ("pod", "lane"), k=2, root=5)[None],
+        mesh=mesh, in_specs=P(("pod", "lane")), out_specs=P(("pod", "lane"))))
+    out = sm(x)
+    for d in range(8):
+        np.testing.assert_allclose(np.asarray(out[d]), np.arange(4) + 1.0)

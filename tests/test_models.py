@@ -1,0 +1,131 @@
+"""Per-architecture smoke + consistency tests (reduced configs, full code
+paths: train forward, prefill, decode, published param counts)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import lm
+
+# published sizes (from the arch ids), 10% tolerance
+_PUBLISHED_B = {
+    "deepseek_v2_236b": 236, "dbrx_132b": 132, "jamba_1_5_large_398b": 398,
+    "musicgen_large": 2.4, "gemma_7b": 8.5, "yi_6b": 6.1, "minicpm3_4b": 4.3,
+    "h2o_danube_3_4b": 4.0, "qwen2_vl_7b": 7.6, "falcon_mamba_7b": 7.3,
+}
+
+
+def _batch(cfg, B, S, rng_key=0, with_labels=True):
+    key = jax.random.PRNGKey(rng_key)
+    if cfg.embed_inputs:
+        shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, S)
+        toks = jax.random.randint(key, shape, 0, cfg.vocab_size)
+        out = {"tokens": toks}
+        if with_labels:
+            out["labels"] = jax.random.randint(jax.random.PRNGKey(rng_key + 1),
+                                               shape, 0, cfg.vocab_size)
+    else:
+        out = {"embeds": jax.random.normal(key, (B, S, cfg.d_model))}
+        if with_labels:
+            out["labels"] = jax.random.randint(jax.random.PRNGKey(rng_key + 1),
+                                               (B, S), 0, cfg.vocab_size)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    loss, metrics = jax.jit(lambda p, b: lm.loss_fn(cfg, p, b))(
+        params, _batch(cfg, 2, 64)
+    )
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    # logits shape sanity via prefill
+    lg, cache = lm.prefill(cfg, params, _batch(cfg, 2, 64, with_labels=False),
+                           capacity=65)
+    assert lg.shape[0] == 2 and lg.shape[-1] == cfg.padded_vocab
+    assert np.all(np.isfinite(np.asarray(lg, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:  # dropless capacity for exact equivalence
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=float(cfg.moe.num_experts))
+        )
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    full = _batch(cfg, B, S + 1, with_labels=False)
+    key = "tokens" if cfg.embed_inputs else "embeds"
+    ref_lg, _ = lm.prefill(cfg, params, full, capacity=S + 1)
+    head = {key: full[key][:, :S]}
+    _, cache = lm.prefill(cfg, params, head, capacity=S + 1)
+    lg, _ = lm.decode_step(cfg, params, full[key][:, S:S + 1], cache,
+                           jnp.int32(S))
+    err = float(jnp.abs(lg.astype(jnp.float32) - ref_lg.astype(jnp.float32)).max())
+    scale = max(float(jnp.abs(ref_lg.astype(jnp.float32)).max()), 1e-6)
+    assert err / scale < 0.05, f"{arch}: rel err {err/scale:.3f}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_published(arch):
+    n = get_config(arch).param_count() / 1e9
+    want = _PUBLISHED_B[arch]
+    assert abs(n - want) / want < 0.10, f"{arch}: {n:.2f}B vs {want}B"
+
+
+def test_sub_quadratic_flags():
+    assert get_config("falcon_mamba_7b").sub_quadratic
+    assert get_config("jamba_1_5_large_398b").sub_quadratic
+    assert get_config("h2o_danube_3_4b").sub_quadratic  # SWA
+    for a in ("deepseek_v2_236b", "dbrx_132b", "gemma_7b", "yi_6b",
+              "minicpm3_4b", "qwen2_vl_7b", "musicgen_large"):
+        assert not get_config(a).sub_quadratic, a
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = get_smoke_config("dbrx_132b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    _, metrics = lm.loss_fn(cfg, params, _batch(cfg, 2, 64))
+    assert float(metrics["aux"]) > 0
+
+
+def test_swa_limits_attention():
+    """The L-layer receptive field of sliding-window attention is L*W: a
+    token further back than that cannot influence the output."""
+    base = get_smoke_config("h2o_danube_3_4b")
+    cfg = dataclasses.replace(
+        base, attn=dataclasses.replace(base.attn, sliding_window=16)
+    )  # 3 layers x W=16 -> receptive field 48
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    S = 128
+    b1 = _batch(cfg, 1, S, rng_key=5, with_labels=False)
+    b2 = {"tokens": b1["tokens"].at[:, 0].set((b1["tokens"][:, 0] + 7) % cfg.vocab_size)}
+    lg1, _ = lm.prefill(cfg, params, b1, capacity=S)
+    lg2, _ = lm.prefill(cfg, params, b2, capacity=S)
+    # position 127 is 127 > 48 tokens past position 0 -> unchanged
+    np.testing.assert_allclose(np.asarray(lg1, np.float32),
+                               np.asarray(lg2, np.float32), atol=1e-3)
+    # control: within the receptive field the perturbation must propagate
+    b3 = {"tokens": b1["tokens"].at[:, S - 4].set(
+        (b1["tokens"][:, S - 4] + 7) % cfg.vocab_size)}
+    lg3, _ = lm.prefill(cfg, params, b3, capacity=S)
+    assert float(jnp.abs(lg1.astype(jnp.float32) - lg3.astype(jnp.float32)).max()) > 1e-4
+
+
+def test_mrope_positions_affect_output():
+    cfg = get_smoke_config("qwen2_vl_7b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg, 1, 32, with_labels=False)
+    p1 = jnp.broadcast_to(jnp.arange(32, dtype=jnp.int32)[None, :, None], (1, 32, 3))
+    p2 = p1.at[..., 1].set(p1[..., 1] * 2)  # different spatial coords
+    lg1, _ = lm.prefill(cfg, params, {**b, "positions": p1}, capacity=32)
+    lg2, _ = lm.prefill(cfg, params, {**b, "positions": p2}, capacity=32)
+    assert float(jnp.abs(lg1 - lg2).max()) > 1e-4

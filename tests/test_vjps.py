@@ -1,0 +1,81 @@
+"""Custom-VJP correctness: flash attention and selective scan gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import flash_attention_train
+from repro.models.mamba import selective_scan
+
+RNG = np.random.RandomState(0)
+
+
+def _attn_ref(q, k, v, scale, window):
+    B, Sq, Hkv, G, hd = q.shape
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    m = kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("B,S,Hkv,G,hd,win,skip", [
+    (2, 128, 2, 2, 16, None, True),
+    (2, 128, 2, 2, 16, None, False),
+    (1, 96, 1, 4, 32, None, True),
+    (2, 128, 2, 1, 16, 48, True),
+    (2, 64, 3, 2, 8, 24, False),
+])
+def test_flash_train_grads(B, S, Hkv, G, hd, win, skip):
+    q = jnp.asarray(RNG.randn(B, S, Hkv, G, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, Hkv, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, Hkv, hd), jnp.float32)
+    scale = 1 / np.sqrt(hd)
+    f = lambda *a: flash_attention_train(*a, scale, win, 32, 32, skip).sum() * 0.01
+    g = lambda *a: _attn_ref(*a, scale, win).sum() * 0.01
+    np.testing.assert_allclose(f(q, k, v), g(q, k, v), rtol=1e-5)
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        assert float(jnp.abs(a - b).max()) < 1e-4
+
+
+def _scan_ref(a, b, c, h0):
+    def step(h, xs):
+        at, bt, ct = xs
+        h = at * h + bt
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    hT, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1),
+                                     c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT
+
+
+@pytest.mark.parametrize("B,S,di,N,ch", [(2, 64, 8, 4, 16), (1, 96, 16, 8, 32)])
+def test_selective_scan_grads(B, S, di, N, ch):
+    a = jnp.asarray(RNG.rand(B, S, di, N) * 0.9 + 0.05, jnp.float32)
+    b = jnp.asarray(RNG.randn(B, S, di, N) * 0.1, jnp.float32)
+    c = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    h0 = jnp.asarray(RNG.randn(B, di, N) * 0.1, jnp.float32)
+    y1, h1 = selective_scan(a, b, c, h0, ch)
+    y2, h2 = _scan_ref(a, b, c, h0)
+    np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(h1, h2, rtol=2e-5, atol=1e-5)
+
+    def L(fn):
+        def inner(a, b, c, h0):
+            y, h = fn(a, b, c, h0)
+            return (y * y).sum() + 0.5 * (h * h).sum()
+        return inner
+
+    g1 = jax.grad(L(lambda *x: selective_scan(*x, ch)), argnums=(0, 1, 2, 3))(a, b, c, h0)
+    g2 = jax.grad(L(_scan_ref), argnums=(0, 1, 2, 3))(a, b, c, h0)
+    for x, y in zip(g1, g2):
+        err = float(jnp.abs(x - y).max())
+        assert err < 1e-3 * max(float(jnp.abs(y).max()), 1.0)
