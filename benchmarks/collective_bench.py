@@ -22,27 +22,24 @@ import time
 import jax
 import numpy as np
 
-from repro.core import schedule as S
-from repro.core.simulate import simulate
+from benchmarks.paper_tables import _cell
 from repro.core.topology import Machine, Topology, TPU_V5E
 
 
 def tpu_projection():
     rows = []
-    topo = Topology(num_nodes=2, procs_per_node=256, k_lanes=8)
-    m = Machine(topo=topo, cost=TPU_V5E.cost)
     proxy = Topology(num_nodes=2, procs_per_node=16, k_lanes=8)
     mp = Machine(topo=proxy, cost=TPU_V5E.cost)
     for c in [1 << 10, 1 << 16, 1 << 22]:
-        rows.append(f"tpu_bcast,kported,2,{c},"
-                    f"{simulate(S.kported_broadcast(proxy.p, 2, c), mp).time_us:.2f},")
-        rows.append(f"tpu_bcast,fulllane,8,{c},"
-                    f"{simulate(S.fulllane_broadcast(proxy, c), mp).time_us:.2f},")
+        rows.append(_cell("tpu_bcast", "kported", 2, c,
+                          "broadcast", "kported", proxy, 2, c, mp))
+        rows.append(_cell("tpu_bcast", "fulllane", 8, c,
+                          "broadcast", "fulllane", proxy, 8, c, mp))
         blk = max(1, c // proxy.p)
-        rows.append(f"tpu_a2a,bruck,8,{c},"
-                    f"{simulate(S.bruck_alltoall(proxy.p, 8, blk), mp).time_us:.2f},")
-        rows.append(f"tpu_a2a,fulllane,8,{c},"
-                    f"{simulate(S.fulllane_alltoall(proxy, blk), mp).time_us:.2f},")
+        rows.append(_cell("tpu_a2a", "bruck", 8, c,
+                          "alltoall", "bruck", proxy, 8, blk, mp))
+        rows.append(_cell("tpu_a2a", "fulllane", 8, c,
+                          "alltoall", "fulllane", proxy, 8, blk, mp))
     return rows
 
 

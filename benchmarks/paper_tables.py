@@ -3,19 +3,29 @@
 The paper's numbers are machine+library artifacts (36x32 dual-OmniPath,
 three MPI libs); reproduction means the simulator recovers the *structure*:
 per-(algorithm, k, c) times in the same regime, with the same orderings and
-crossovers.  Each function emits CSV rows
+crossovers.  Each function emits one cell dict per table row
 
-    table,impl,k,c,sim_us,paper_us
+    {table, impl, k, c, sim_us, paper_us, wall_s}
 
 where ``paper_us`` is the published Open MPI avg (when that cell exists in
-the paper) for side-by-side comparison.
+the paper) and ``wall_s`` is the wall-clock cost of producing the cell
+(schedule generation + simulation) — the perf trajectory tracked by
+``benchmarks.run --json``.  ``csv_row`` renders the legacy CSV line.
+
+All cells run on the compiled schedule IR (``repro.core.schedule_ir``):
+the alltoall families are generated array-natively and every schedule is
+cached process-wide, so the full paper sweep is seconds, not minutes.  The
+simulated values are bit-identical to the legacy per-``Msg`` simulator
+(pinned by ``tests/test_schedule_ir.py``).
 """
 
 from __future__ import annotations
 
-from repro.core import schedule as S
+import time
+
+from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
-from repro.core.topology import Topology, hydra_machine
+from repro.core.topology import Machine, Topology, hydra_machine
 
 M = hydra_machine()
 TOPO = M.topo  # 36 x 32, k=2 physical
@@ -46,7 +56,7 @@ PAPER = {
     ("klane_scatter", 1, 869): 458.39,
     ("klane_scatter", 6, 869): 460.32,
     ("fulllane_scatter", 6, 869): 1444.02,
-    # Tables 38-41: alltoall p=1152 (c per proc; per-pair block ~ c/p -> use c)
+    # Tables 38-41: alltoall p=1152 (c is the per-pair block, paper §4.4)
     ("kported_a2a", 1, 869): 11784.61,
     ("kported_a2a", 6, 869): 11187.27,
     ("kported_a2a", 6, 1): 1250.47,
@@ -60,9 +70,27 @@ _SCATTER_C = [9, 87, 869]
 _A2A_C = [1, 9, 87, 869]
 
 
-def _row(table, impl, k, c, us):
-    ref = PAPER.get((impl, k, c), "")
-    return f"{table},{impl},{k},{c},{us:.2f},{ref}"
+def _cell(table, impl, k, c, op, alg, topo, gen_k, blk, machine=None):
+    """Generate (cached) + simulate one table cell, timing the wall cost."""
+    t0 = time.perf_counter()
+    cs = compiled_schedule(op, alg, topo, gen_k, blk)
+    us = simulate(cs, machine if machine is not None else M).time_us
+    return {
+        "table": table,
+        "impl": impl,
+        "k": k,
+        "c": c,
+        "sim_us": us,
+        "paper_us": PAPER.get((impl, k, c), ""),
+        "wall_s": time.perf_counter() - t0,
+    }
+
+
+def csv_row(cell: dict) -> str:
+    return (
+        f"{cell['table']},{cell['impl']},{cell['k']},{cell['c']},"
+        f"{cell['sim_us']:.2f},{cell['paper_us']}"
+    )
 
 
 def table_alltoall_node_vs_network():
@@ -72,12 +100,10 @@ def table_alltoall_node_vs_network():
         blk = max(1, c // 32)
         on = Topology(1, 32, 2)
         off = Topology(32, 1, 1)
-        t_on = simulate(S.kported_alltoall(32, 32, blk),
-                        type(M)(topo=on, cost=M.cost)).time_us
-        t_off = simulate(S.kported_alltoall(32, 32, blk),
-                         type(M)(topo=off, cost=M.cost)).time_us
-        rows.append(_row("T2-7", "a2a_n1", 32, c, t_on))
-        rows.append(_row("T2-7", "a2a_n32", 32, c, t_off))
+        rows.append(_cell("T2-7", "a2a_n1", 32, c, "alltoall", "kported",
+                          on, 32, blk, Machine(topo=on, cost=M.cost)))
+        rows.append(_cell("T2-7", "a2a_n32", 32, c, "alltoall", "kported",
+                          off, 32, blk, Machine(topo=off, cost=M.cost)))
     return rows
 
 
@@ -86,12 +112,12 @@ def table_broadcast():
     rows = []
     for c in _BCAST_C:
         for k in (1, 2, 6):
-            rows.append(_row("T8-9", "klane_bcast", k,
-                             c, simulate(S.klane_broadcast(TOPO, k, c), M).time_us))
-            rows.append(_row("T10-11", "kported_bcast", k,
-                             c, simulate(S.kported_broadcast(TOPO.p, k, c), M).time_us))
-        rows.append(_row("T12", "fulllane_bcast", 6,
-                         c, simulate(S.fulllane_broadcast(TOPO, c), M).time_us))
+            rows.append(_cell("T8-9", "klane_bcast", k, c,
+                              "broadcast", "klane", TOPO, k, c))
+            rows.append(_cell("T10-11", "kported_bcast", k, c,
+                              "broadcast", "kported", TOPO, k, c))
+        rows.append(_cell("T12", "fulllane_bcast", 6, c,
+                          "broadcast", "fulllane", TOPO, 6, c))
     return rows
 
 
@@ -100,32 +126,31 @@ def table_scatter():
     rows = []
     for c in _SCATTER_C:
         for k in (1, 2, 6):
-            rows.append(_row("T23-24", "klane_scatter", k,
-                             c, simulate(S.klane_scatter(TOPO, k, c), M).time_us))
-            rows.append(_row("T25-26", "kported_scatter", k,
-                             c, simulate(S.kported_scatter(TOPO.p, k, c), M).time_us))
-        rows.append(_row("T27", "fulllane_scatter", 6,
-                         c, simulate(S.fulllane_scatter(TOPO, c), M).time_us))
+            rows.append(_cell("T23-24", "klane_scatter", k, c,
+                              "scatter", "klane", TOPO, k, c))
+            rows.append(_cell("T25-26", "kported_scatter", k, c,
+                              "scatter", "kported", TOPO, k, c))
+        rows.append(_cell("T27", "fulllane_scatter", 6, c,
+                          "scatter", "fulllane", TOPO, 6, c))
     return rows
 
 
 def table_alltoall():
-    """Paper §4.4 (Tables 38-49).  c is the per-proc count; the per-pair
-    block is c/p (>=1)."""
+    """Paper §4.4 (Tables 38-49).  ``c`` is the per-pair block size, exactly
+    as in the paper's tables (each process contributes c elements to every
+    other process; at c=869 that is ~4 MB leaving each process, matching the
+    paper's ~11-12 ms Open MPI cells)."""
     rows = []
     for c in _A2A_C:
-        blk = max(1, c // TOPO.p) if c >= TOPO.p else 1
-        # the paper's counts are small; use c directly as block for c<p
-        blk = max(1, c // 32)
         for k in (1, 6):
-            rows.append(_row("T39-40", "kported_a2a", k,
-                             c, simulate(S.kported_alltoall(TOPO.p, k, blk), M).time_us))
-        rows.append(_row("T38", "klane_a2a", 32,
-                         c, simulate(S.klane_alltoall(TOPO, blk), M).time_us))
-        rows.append(_row("T41", "fulllane_a2a", 6,
-                         c, simulate(S.fulllane_alltoall(TOPO, blk), M).time_us))
-        rows.append(_row("T41b", "bruck_a2a", 6,
-                         c, simulate(S.bruck_alltoall(TOPO.p, 6, blk), M).time_us))
+            rows.append(_cell("T39-40", "kported_a2a", k, c,
+                              "alltoall", "kported", TOPO, k, c))
+        rows.append(_cell("T38", "klane_a2a", 32, c,
+                          "alltoall", "klane", TOPO, 32, c))
+        rows.append(_cell("T41", "fulllane_a2a", 6, c,
+                          "alltoall", "fulllane", TOPO, 6, c))
+        rows.append(_cell("T41b", "bruck_a2a", 6, c,
+                          "alltoall", "bruck", TOPO, 6, c))
     return rows
 
 

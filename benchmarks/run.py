@@ -2,14 +2,21 @@
 TPU projection, gradient-sync HLO comparison, and the roofline summary.
 
 Prints ``name,impl,k,c,sim_us,paper_us`` CSV rows (and roofline rows from
-the dry-run artifacts when present).
+the dry-run artifacts when present).  ``--json FILE`` additionally writes
+every simulator cell as machine-readable
+``{table, impl, k, c, sim_us, wall_s}`` records so the perf trajectory of
+the schedule IR is tracked across PRs (``BENCH_schedules.json`` by
+convention).
 
-  PYTHONPATH=src python -m benchmarks.run [--skip-hlo] [--only paper|tpu|hlo|roofline]
+  PYTHONPATH=src python -m benchmarks.run [--skip-hlo] \
+      [--only paper|tpu|hlo|roofline] [--json BENCH_schedules.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 
 def main() -> None:
@@ -17,18 +24,24 @@ def main() -> None:
     ap.add_argument("--only", choices=["paper", "tpu", "hlo", "roofline"],
                     default=None)
     ap.add_argument("--skip-hlo", action="store_true")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write per-cell {table,impl,k,c,sim_us,wall_s} JSON")
     args = ap.parse_args()
 
+    cells: list[dict] = []
     print("table,impl,k,c,sim_us,paper_us")
     if args.only in (None, "paper"):
-        from benchmarks.paper_tables import ALL_TABLES
+        from benchmarks.paper_tables import ALL_TABLES, csv_row
         for fn in ALL_TABLES:
-            for row in fn():
-                print(row, flush=True)
+            for cell in fn():
+                cells.append(cell)
+                print(csv_row(cell), flush=True)
     if args.only in (None, "tpu"):
         from benchmarks.collective_bench import tpu_projection
-        for row in tpu_projection():
-            print(row, flush=True)
+        from benchmarks.paper_tables import csv_row
+        for cell in tpu_projection():
+            cells.append(cell)
+            print(csv_row(cell), flush=True)
     if args.only in (None, "hlo") and not args.skip_hlo:
         from benchmarks.collective_bench import grad_sync_hlo
         for row in grad_sync_hlo():
@@ -46,6 +59,25 @@ def main() -> None:
                 emitted = True
         if not emitted:
             print("roofline,,,no dry-run artifacts (run repro.launch.dryrun),,,")
+
+    if args.json:
+        payload = {
+            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "cells": [
+                {
+                    "table": c["table"],
+                    "impl": c["impl"],
+                    "k": c["k"],
+                    "c": c["c"],
+                    "sim_us": c["sim_us"],
+                    "wall_s": c["wall_s"],
+                }
+                for c in cells
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload['cells'])} cells to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

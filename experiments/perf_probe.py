@@ -81,6 +81,49 @@ def top_offenders(txt, top=6, kind="collective"):
     return items[:top]
 
 
+# HLO collective kind -> the paper op family the k-lane selector can tune.
+_KIND_TO_OP = {
+    "all-gather": "broadcast",
+    "all-reduce": "broadcast",
+    "reduce-scatter": "scatter",
+    "all-to-all": "alltoall",
+}
+
+
+def selector_choices(cost, elem_bytes=2, num_nodes=2, procs_per_node=256,
+                     k_lanes=8):
+    """k-lane cost-model picks for the cell's dominant collectives.
+
+    Treats each kind's aggregate per-device bytes as one virtual collective
+    on the selector's mesh and converts to the payload unit ``select()``
+    expects: total elements for broadcast, per-proc block for scatter,
+    per-pair block for alltoall.  Runs on the compiled schedule IR (cached,
+    affine in payload), so this is cheap enough to print on every probe —
+    the 'tuned collectives' view of the same cell the roofline terms
+    describe.
+    """
+    from repro.core.selector import select
+
+    p = num_nodes * procs_per_node
+    rows = []
+    for kind, nbytes in sorted(cost.collective_bytes.items(), key=lambda kv: -kv[1]):
+        op = _KIND_TO_OP.get(kind)
+        if op is None or not nbytes:
+            continue
+        elems = int(nbytes) // elem_bytes
+        if op == "scatter":
+            payload = elems // p
+        elif op == "alltoall":
+            payload = elems // (p * p)
+        else:
+            payload = elems
+        payload = max(1, payload)
+        ch = select(op, payload, num_nodes=num_nodes,
+                    procs_per_node=procs_per_node, k_lanes=k_lanes)
+        rows.append((kind, op, payload, ch.algorithm, ch.est_us))
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("arch")
@@ -112,6 +155,10 @@ def main():
         print("top collectives:")
         for tot, m, ob, kind, raw in top_offenders(txt, args.top):
             print(f"  {tot/2**30:8.2f}GiB x{m:6.0f} {kind:18s} {raw[:90]}")
+        print("schedule selector (k-lane model, per collective kind):")
+        for kind, op, payload, alg, est in selector_choices(cost):
+            print(f"  {kind:18s} -> {op:9s} payload={payload:>12d}  "
+                  f"best={alg:9s} est={est:.1f}us")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,7 @@
 
 * :mod:`repro.core.topology`  — machine model (nodes x lanes, alpha-beta).
 * :mod:`repro.core.schedule`  — round-based schedule generators (§2).
+* :mod:`repro.core.schedule_ir` — compiled SoA schedule IR + schedule cache.
 * :mod:`repro.core.simulate`  — hierarchical cost simulator (paper tables).
 * :mod:`repro.core.collectives` — shard_map TPU implementations.
 * :mod:`repro.core.selector`  — cost-model algorithm selection.
@@ -24,6 +25,11 @@ from repro.core.schedule import (
     fulllane_scatter,
     fulllane_alltoall,
 )
-from repro.core.simulate import simulate, SimResult
+from repro.core.schedule_ir import (
+    CompiledSchedule,
+    compile_schedule,
+    compiled_schedule,
+)
+from repro.core.simulate import simulate, simulate_msgs, SimResult
 from repro.core import collectives
 from repro.core.selector import select, crossover_table

@@ -43,10 +43,17 @@ __all__ = [
 ]
 
 
+def _axis_size_one(axis_name) -> int:
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_name))
+    # pinned 0.4.x: core.axis_frame(name) resolves to the bound axis size
+    return int(jax.core.axis_frame(axis_name))
+
+
 def axis_size(axis_name) -> int:
     if isinstance(axis_name, (tuple, list)):
-        return int(np.prod([jax.lax.axis_size(a) for a in axis_name]))
-    return jax.lax.axis_size(axis_name)
+        return int(np.prod([_axis_size_one(a) for a in axis_name]))
+    return _axis_size_one(axis_name)
 
 
 def _pad_to_multiple(x: jax.Array, m: int, axis: int = 0):
@@ -153,7 +160,7 @@ def _axis_linear_index(axis_names: Sequence[str]):
         return jax.lax.axis_index(axis_names)
     idx = jax.lax.axis_index(axis_names[0])
     for a in axis_names[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size_one(a) + jax.lax.axis_index(a)
     return idx
 
 

@@ -1,0 +1,493 @@
+"""Compiled structure-of-arrays IR for round-based schedules.
+
+The legacy :mod:`repro.core.schedule` representation materializes every
+message as a frozen ``Msg`` dataclass; at paper scale (p = 36*32 = 1152) the
+O(p^2)-message alltoall families allocate >1M Python objects per schedule and
+dominate both generation and simulation time.  This module is the compiled
+counterpart: a :class:`CompiledSchedule` stores one flat numpy array per
+message field (``src``, ``dst``, ``elems``) plus a CSR-style ``round_ptr``
+delimiting rounds, and the simulator reduces over these arrays with
+``np.bincount`` instead of per-message Python dict updates.
+
+Two entry points produce the IR:
+
+* :func:`compile_schedule` flattens any legacy ``Schedule`` (every generator
+  keeps working unchanged);
+* the ``*_ir`` array-native generators build the O(p^2) alltoall families
+  (``kported``, ``bruck``, ``klane``, ``fulllane``) directly as arrays and
+  never construct a single ``Msg``.  They are round-for-round,
+  message-multiset-identical to their legacy counterparts (pinned by
+  ``tests/test_schedule_ir.py``).
+
+Block-metadata ownership rules
+------------------------------
+The IR deliberately carries **no per-message block sets**.  Abstract block
+ids exist to *verify* schedules by data-flow execution
+(``schedule.verify_broadcast`` et al.), which is inherently per-message and
+stays on the legacy ``Msg`` path.  The IR owns only what the cost model
+needs: message endpoints, element counts, round structure, and derived
+aggregates.  Consequently:
+
+* anything that needs ``Msg.blocks`` (verification, ppermute compilation in
+  ``core.collectives``) must generate the legacy ``Schedule``;
+* ``compile_schedule`` drops block metadata irreversibly — the IR cannot be
+  decompiled back to a verifiable schedule;
+* the ``*_ir`` generators are trusted because their round/message structure
+  is pinned against the verified legacy generators by tests, not because
+  they can be re-verified directly.
+
+Topology-dependent per-round statistics (node classification of each
+message) are cached on the compiled schedule per ``procs_per_node``, so
+re-simulating the same structure under several machine models — or, via the
+schedule cache, at several payload sizes — never re-derives them.
+
+Process-wide schedule cache
+---------------------------
+:func:`compiled_schedule` memoizes compiled schedules keyed by
+``(op, algorithm, topo, k, c, root)``.  Round structure is independent of
+the per-block payload ``c`` (only ``elems`` scales with it), which the
+cost-model selector exploits by simulating two payload sizes and
+interpolating the affine ``A + B*c`` round cost (see
+``core.selector.affine_cost``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.topology import Topology
+
+__all__ = [
+    "CompiledSchedule",
+    "RoundStats",
+    "compile_schedule",
+    "kported_alltoall_ir",
+    "bruck_alltoall_ir",
+    "klane_alltoall_ir",
+    "fulllane_alltoall_ir",
+    "IR_GENERATORS",
+    "compiled_schedule",
+    "schedule_cache_info",
+    "schedule_cache_clear",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundStats:
+    """Per-(round, proc) and per-(round, node) aggregates for one
+    ``procs_per_node`` partitioning of a compiled schedule.
+
+    All 2-D arrays are dense ``[R, p]`` or ``[R, N]`` float64/int64 grids;
+    entries for (round, proc/node) pairs with no traffic are zero and masked
+    by the corresponding ``*_cnt > 0`` test (matching the legacy simulator,
+    which only iterates over dict keys that were touched).
+    """
+
+    send_elems: np.ndarray  # [R, p] float64 (exact: integer-valued < 2^53)
+    send_cnt: np.ndarray  # [R, p] int64
+    send_inter: np.ndarray  # [R, p] bool — proc had >= 1 off-node send
+    recv_elems: np.ndarray  # [R, p] float64
+    recv_cnt: np.ndarray  # [R, p] int64
+    recv_inter: np.ndarray  # [R, p] bool
+    node_out: np.ndarray  # [R, N] float64, off-node elems leaving
+    node_in: np.ndarray  # [R, N] float64
+    node_out_msgs: np.ndarray  # [R, N] int64
+    node_in_msgs: np.ndarray  # [R, N] int64
+    node_intra: np.ndarray  # [R, N] float64
+    node_intra_cnt: np.ndarray  # [R, N] int64
+    inter_elems: int  # total off-node traffic
+    intra_elems: int  # total on-node traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSchedule:
+    """Structure-of-arrays schedule: flat message arrays + round offsets.
+
+    ``round_ptr`` has length ``num_rounds + 1``; round ``r`` owns messages
+    ``round_ptr[r]:round_ptr[r+1]`` (possibly empty, preserving the legacy
+    round count for ``SimResult.rounds`` parity).
+    """
+
+    op: str
+    algorithm: str
+    p: int
+    k: int
+    src: np.ndarray  # int64 [M]
+    dst: np.ndarray  # int64 [M]
+    elems: np.ndarray  # int64 [M]
+    round_ptr: np.ndarray  # int64 [R+1]
+    # per-procs_per_node derived statistics (lazily built, shared across
+    # simulations of the same structure under different cost params).
+    _stats: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.round_ptr) - 1
+
+    @property
+    def num_msgs(self) -> int:
+        return int(self.src.size)
+
+    def total_elems(self) -> int:
+        return int(self.elems.sum())
+
+    def round_ids(self) -> np.ndarray:
+        """Round index of each message (``[M]`` int64)."""
+        return np.repeat(
+            np.arange(self.num_rounds, dtype=np.int64), np.diff(self.round_ptr)
+        )
+
+    def node_of(self, procs_per_node: int) -> tuple[np.ndarray, np.ndarray]:
+        """(src_node, dst_node) arrays under a node partitioning."""
+        return self.src // procs_per_node, self.dst // procs_per_node
+
+    def max_port_width(self) -> int:
+        """Max concurrent sends or receives at any processor in any round
+        (parity with ``Schedule.max_port_width``)."""
+        if self.num_msgs == 0:
+            return 0
+        rid = self.round_ids()
+        skey = rid * self.p + self.src
+        dkey = rid * self.p + self.dst
+        n = self.num_rounds * self.p
+        return int(
+            max(
+                np.bincount(skey, minlength=n).max(),
+                np.bincount(dkey, minlength=n).max(),
+            )
+        )
+
+    def stats(self, procs_per_node: int) -> RoundStats:
+        """Aggregate per-round statistics under a node partitioning; cached
+        per ``procs_per_node`` so repeated simulation shares the work."""
+        cached = self._stats.get(procs_per_node)
+        if cached is not None:
+            return cached
+        n = procs_per_node
+        p, R = self.p, self.num_rounds
+        if p % n:
+            raise ValueError(f"p={p} not divisible by procs_per_node={n}")
+        N = p // n
+        rid = self.round_ids()
+        snode = self.src // n
+        dnode = self.dst // n
+        inter = snode != dnode
+        ew = self.elems.astype(np.float64)
+
+        skey = rid * p + self.src
+        dkey = rid * p + self.dst
+        pm = R * p
+        send_elems = np.bincount(skey, weights=ew, minlength=pm).reshape(R, p)
+        send_cnt = np.bincount(skey, minlength=pm).reshape(R, p)
+        send_inter = (
+            np.bincount(skey[inter], minlength=pm).reshape(R, p) > 0
+        )
+        recv_elems = np.bincount(dkey, weights=ew, minlength=pm).reshape(R, p)
+        recv_cnt = np.bincount(dkey, minlength=pm).reshape(R, p)
+        recv_inter = (
+            np.bincount(dkey[inter], minlength=pm).reshape(R, p) > 0
+        )
+
+        nskey = rid * N + snode
+        ndkey = rid * N + dnode
+        nm = R * N
+        node_out = np.bincount(
+            nskey[inter], weights=ew[inter], minlength=nm
+        ).reshape(R, N)
+        node_in = np.bincount(
+            ndkey[inter], weights=ew[inter], minlength=nm
+        ).reshape(R, N)
+        node_out_msgs = np.bincount(nskey[inter], minlength=nm).reshape(R, N)
+        node_in_msgs = np.bincount(ndkey[inter], minlength=nm).reshape(R, N)
+        node_intra = np.bincount(
+            nskey[~inter], weights=ew[~inter], minlength=nm
+        ).reshape(R, N)
+        node_intra_cnt = np.bincount(nskey[~inter], minlength=nm).reshape(R, N)
+
+        st = RoundStats(
+            send_elems=send_elems,
+            send_cnt=send_cnt.astype(np.int64),
+            send_inter=send_inter,
+            recv_elems=recv_elems,
+            recv_cnt=recv_cnt.astype(np.int64),
+            recv_inter=recv_inter,
+            node_out=node_out,
+            node_in=node_in,
+            node_out_msgs=node_out_msgs.astype(np.int64),
+            node_in_msgs=node_in_msgs.astype(np.int64),
+            node_intra=node_intra,
+            node_intra_cnt=node_intra_cnt.astype(np.int64),
+            inter_elems=int(self.elems[inter].sum()),
+            intra_elems=int(self.elems[~inter].sum()),
+        )
+        self._stats[procs_per_node] = st
+        return st
+
+
+# ---------------------------------------------------------------------------
+# Compilation from the legacy Msg representation.
+# ---------------------------------------------------------------------------
+
+
+def compile_schedule(schedule: sched.Schedule) -> CompiledSchedule:
+    """Flatten a legacy ``Schedule`` into the array IR (drops block ids)."""
+    counts = [len(r.msgs) for r in schedule.rounds]
+    m = sum(counts)
+    src = np.empty(m, dtype=np.int64)
+    dst = np.empty(m, dtype=np.int64)
+    elems = np.empty(m, dtype=np.int64)
+    i = 0
+    for r in schedule.rounds:
+        for msg in r.msgs:
+            src[i] = msg.src
+            dst[i] = msg.dst
+            elems[i] = msg.elems
+            i += 1
+    round_ptr = np.zeros(len(counts) + 1, dtype=np.int64)
+    np.cumsum(counts, out=round_ptr[1:])
+    return CompiledSchedule(
+        op=schedule.op,
+        algorithm=schedule.algorithm,
+        p=schedule.p,
+        k=schedule.k,
+        src=src,
+        dst=dst,
+        elems=elems,
+        round_ptr=round_ptr,
+    )
+
+
+def _from_rounds(
+    op: str, algorithm: str, p: int, k: int, rounds: list[tuple]
+) -> CompiledSchedule:
+    """Assemble a CompiledSchedule from per-round (src, dst, elems) triples."""
+    if rounds:
+        src = np.concatenate([r[0] for r in rounds])
+        dst = np.concatenate([r[1] for r in rounds])
+        elems = np.concatenate([r[2] for r in rounds])
+    else:
+        src = dst = elems = np.empty(0, dtype=np.int64)
+    round_ptr = np.zeros(len(rounds) + 1, dtype=np.int64)
+    np.cumsum([r[0].size for r in rounds], out=round_ptr[1:])
+    return CompiledSchedule(
+        op=op,
+        algorithm=algorithm,
+        p=p,
+        k=k,
+        src=src.astype(np.int64),
+        dst=dst.astype(np.int64),
+        elems=elems.astype(np.int64),
+        round_ptr=round_ptr,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Array-native generators for the O(p^2)-message alltoall families.
+# Each mirrors its legacy generator's round structure and per-round message
+# multiset exactly; no Msg objects are ever created.
+# ---------------------------------------------------------------------------
+
+
+def kported_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
+    """Direct alltoall (paper §2.1): ceil((p-1)/k) rounds of k shifted sends.
+
+    Round t covers offsets d = 1+t*k .. min(1+(t+1)*k, p)-1; every processor
+    i sends its per-pair block to (i + d) mod p for each offset in the round.
+    """
+    procs = np.arange(p, dtype=np.int64)
+    rounds = []
+    offset = 1
+    while offset < p:
+        ds = np.arange(offset, min(offset + k, p), dtype=np.int64)
+        src = np.tile(procs, ds.size)
+        dst = (src + np.repeat(ds, p)) % p
+        elems = np.full(src.size, c, dtype=np.int64)
+        rounds.append((src, dst, elems))
+        offset += k
+    return _from_rounds("alltoall", "kported", p, k, rounds)
+
+
+def bruck_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
+    """Radix-(k+1) message-combining alltoall, computed analytically.
+
+    By translation symmetry every processor holds the same multiset of
+    remaining offsets.  At the phase with ``radix_pow = (k+1)^t`` the live
+    offsets are the multiples of ``radix_pow`` below ``p`` and the block
+    count pooled at offset ``o`` is ``min(radix_pow, p - o)`` (the original
+    offsets ``o..o+radix_pow-1`` that have collapsed onto it).  Processor q
+    sends one message per nonzero digit value d of offset-digit t, carrying
+    every pooled block whose digit is d, to ``(q + d*radix_pow) mod p``.
+    """
+    r = k + 1
+    procs = np.arange(p, dtype=np.int64)
+    rounds = []
+    radix_pow = 1
+    while radix_pow < p:
+        offs = np.arange(0, p, radix_pow, dtype=np.int64)
+        digit = (offs // radix_pow) % r
+        pooled = np.minimum(radix_pow, p - offs)
+        # message size per digit value (same at every processor)
+        nblk = np.bincount(digit, weights=pooled.astype(np.float64), minlength=r)
+        live = [d for d in range(1, r) if nblk[d] > 0]
+        if live:
+            # legacy emission order is q-major, digit-minor
+            d_arr = np.asarray(live, dtype=np.int64)
+            src = np.repeat(procs, d_arr.size)
+            dst = (src + np.tile(d_arr * radix_pow, p)) % p
+            elems = np.tile(
+                (c * nblk[d_arr]).astype(np.int64), p
+            )
+            rounds.append((src, dst, elems))
+        else:
+            rounds.append(
+                (
+                    np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.int64),
+                )
+            )
+        radix_pow *= r
+    return _from_rounds("alltoall", "bruck", p, k, rounds)
+
+
+def klane_alltoall_ir(topo: Topology, c: int) -> CompiledSchedule:
+    """§2.3 alltoall: N-1 node rounds of n lane-legal steps, then a final
+    on-node alltoall of n-1 steps; one c-element message per processor per
+    step."""
+    N, n, p = topo.num_nodes, topo.procs_per_node, topo.p
+    idx = np.arange(p, dtype=np.int64)
+    v, j = idx // n, idx % n
+    elems = np.full(p, c, dtype=np.int64)
+    rounds = []
+    for t in range(1, N):
+        w = (v + t) % N
+        for s in range(n):
+            dst = w * n + (j + s) % n
+            rounds.append((idx, dst, elems))
+    for s in range(1, n):
+        dst = v * n + (j + s) % n
+        rounds.append((idx, dst, elems))
+    return _from_rounds("alltoall", "klane", p, topo.k_lanes, rounds)
+
+
+def fulllane_alltoall_ir(topo: Topology, c: int) -> CompiledSchedule:
+    """§2.2 alltoall: n-1 on-node combining steps (N blocks per message)
+    followed by N-1 node-ring steps of node-combined messages (n blocks)."""
+    N, n, p = topo.num_nodes, topo.procs_per_node, topo.p
+    idx = np.arange(p, dtype=np.int64)
+    v, j = idx // n, idx % n
+    rounds = []
+    elems_a = np.full(p, c * N, dtype=np.int64)
+    for s in range(1, n):
+        dst = v * n + (j + s) % n
+        rounds.append((idx, dst, elems_a))
+    elems_b = np.full(p, c * n, dtype=np.int64)
+    for t in range(1, N):
+        dst = ((v + t) % N) * n + j
+        rounds.append((idx, dst, elems_b))
+    return _from_rounds("alltoall", "fulllane", p, topo.k_lanes, rounds)
+
+
+#: (op, algorithm) -> array-native generator with the ALGORITHMS signature.
+IR_GENERATORS: dict[tuple[str, str], Callable] = {
+    ("alltoall", "kported"): lambda topo, k, c: kported_alltoall_ir(topo.p, k, c),
+    ("alltoall", "bruck"): lambda topo, k, c: bruck_alltoall_ir(topo.p, k, c),
+    ("alltoall", "klane"): lambda topo, k, c: klane_alltoall_ir(topo, c),
+    ("alltoall", "fulllane"): lambda topo, k, c: fulllane_alltoall_ir(topo, c),
+}
+
+
+# ---------------------------------------------------------------------------
+# Process-wide schedule cache.
+# ---------------------------------------------------------------------------
+
+_CACHE: dict[tuple, CompiledSchedule] = {}
+_CACHE_HITS = 0
+_CACHE_MISSES = 0
+_CACHE_MAX = 512
+# Paper-scale alltoall entries cost tens of MB each (message arrays plus the
+# lazily-built [R, p] stats grids), so bound resident bytes as well as count;
+# insertion evicts oldest-first (FIFO) until both bounds hold.
+_CACHE_MAX_BYTES = 512 * 1024 * 1024
+
+
+def _entry_bytes(cs: CompiledSchedule) -> int:
+    n = cs.src.nbytes + cs.dst.nbytes + cs.elems.nbytes + cs.round_ptr.nbytes
+    for st in cs._stats.values():
+        for f in dataclasses.fields(st):
+            v = getattr(st, f.name)
+            if isinstance(v, np.ndarray):
+                n += v.nbytes
+    return n
+
+
+def compiled_schedule(
+    op: str, algorithm: str, topo: Topology, k: int, c: int, root: int = 0
+) -> CompiledSchedule:
+    """Cached compiled schedule for an ``ALGORITHMS`` family.
+
+    Alltoall families come from the array-native generators; the tree
+    families (O(p log p) messages) generate the legacy schedule and compile
+    it.  Cached process-wide keyed by ``(op, algorithm, topo, k, c, root)``
+    — cached entries share their lazily-built per-topology round statistics,
+    so re-simulating a cached schedule under the same machine shape is pure
+    array arithmetic.
+    """
+    global _CACHE_HITS, _CACHE_MISSES
+    key = (
+        op,
+        algorithm,
+        topo.num_nodes,
+        topo.procs_per_node,
+        topo.k_lanes,
+        k,
+        c,
+        root,
+    )
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _CACHE_HITS += 1
+        return hit
+    _CACHE_MISSES += 1
+    if root != 0:
+        raise ValueError("the ALGORITHMS registry generates root=0 schedules")
+    gen = IR_GENERATORS.get((op, algorithm))
+    if gen is not None:
+        cs = gen(topo, k, c)
+    else:
+        legacy = sched.ALGORITHMS[(op, algorithm)](topo, k, c)
+        cs = compile_schedule(legacy)
+    new_bytes = _entry_bytes(cs)
+    while _CACHE and (
+        len(_CACHE) >= _CACHE_MAX
+        or _cache_bytes() + new_bytes > _CACHE_MAX_BYTES
+    ):
+        _CACHE.pop(next(iter(_CACHE)))
+    _CACHE[key] = cs
+    return cs
+
+
+def _cache_bytes() -> int:
+    return sum(_entry_bytes(cs) for cs in _CACHE.values())
+
+
+def schedule_cache_info() -> dict:
+    return {
+        "hits": _CACHE_HITS,
+        "misses": _CACHE_MISSES,
+        "size": len(_CACHE),
+        "bytes": _cache_bytes(),
+    }
+
+
+def schedule_cache_clear() -> None:
+    global _CACHE_HITS, _CACHE_MISSES
+    _CACHE.clear()
+    _CACHE_HITS = 0
+    _CACHE_MISSES = 0

@@ -11,6 +11,20 @@ paper says native MPI libraries get wrong.
 ``select()`` is used by the distribution layer to pick the gradient-allreduce
 and MoE-dispatch implementations per (op, payload, mesh); the choice is
 recorded so EXPERIMENTS.md can show the crossover points.
+
+Hot-path design (the serving/training loop calls this online):
+
+* schedules come from the process-wide compiled-schedule cache
+  (``schedule_ir.compiled_schedule``) — the O(p^2) alltoall families are
+  generated array-natively and never allocate per-message objects;
+* a schedule's round structure is independent of the payload ``c`` — only
+  message sizes scale — so each round's cost is a max of affine functions of
+  ``c`` and the schedule cost is piecewise-affine, in practice affine over
+  each payload regime.  ``affine_cost`` therefore simulates an algorithm at
+  just *two* probe payloads and interpolates ``A + B*c``;
+  ``crossover_table`` uses the probes at the endpoints of the requested size
+  sweep, so the table costs 2 simulations per algorithm instead of one per
+  (algorithm, size) cell, with the endpoint cells exact by construction.
 """
 
 from __future__ import annotations
@@ -18,11 +32,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 
-from repro.core import schedule as sched
+from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
 from repro.core.topology import Machine, Topology, tpu_v5e_machine
 
-__all__ = ["select", "Choice", "crossover_table"]
+__all__ = ["select", "Choice", "crossover_table", "affine_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +62,49 @@ def _proxy_machine(machine: Machine, max_n: int = 16) -> tuple[Machine, float]:
     return proxy, scale
 
 
+def _machine_for(num_nodes: int, procs_per_node: int, k_lanes: int) -> Machine:
+    machine = tpu_v5e_machine(num_pods=num_nodes, k_lanes=k_lanes)
+    return Machine(
+        topo=Topology(num_nodes, procs_per_node, k_lanes), cost=machine.cost
+    )
+
+
+def _candidate_algs(op: str, topo: Topology) -> list[str]:
+    from repro.core.schedule import ALGORITHMS
+
+    algs = []
+    for (sop, alg) in ALGORITHMS:
+        if sop != op:
+            continue
+        if alg == "kported" and op == "alltoall" and topo.p > 64:
+            continue  # O(p^2/k) messages; never competitive at pod scale
+        algs.append(alg)
+    return algs
+
+
+@functools.lru_cache(maxsize=8192)
+def _sim_payload(
+    op: str,
+    alg: str,
+    payload_elems: int,
+    num_nodes: int,
+    procs_per_node: int,
+    k_lanes: int,
+) -> float | None:
+    """Simulated time (us) of one algorithm at one payload on the proxy of
+    the requested mesh; None if the family cannot be generated there."""
+    machine = _machine_for(num_nodes, procs_per_node, k_lanes)
+    proxy, scale = _proxy_machine(machine)
+    topo = proxy.topo
+    c = max(1, int(payload_elems / scale)) if op != "broadcast" else payload_elems
+    k = min(topo.k_lanes, topo.procs_per_node)
+    try:
+        cs = compiled_schedule(op, alg, topo, k, c)
+    except Exception:
+        return None
+    return simulate(cs, proxy).time_us
+
+
 @functools.lru_cache(maxsize=4096)
 def select(
     op: str,
@@ -60,38 +117,82 @@ def select(
     """Pick the cheapest algorithm family for ``op`` at ``payload_elems``
     (total payload for broadcast; per-proc block for scatter; per-pair block
     for alltoall) on the given (node, lane) machine shape."""
-    machine = tpu_v5e_machine(num_pods=num_nodes, k_lanes=k_lanes)
-    machine = Machine(
-        topo=Topology(num_nodes, procs_per_node, k_lanes), cost=machine.cost
-    )
-    proxy, scale = _proxy_machine(machine)
-    topo = proxy.topo
-    c = max(1, int(payload_elems / scale)) if op != "broadcast" else payload_elems
+    machine = _machine_for(num_nodes, procs_per_node, k_lanes)
+    proxy, _ = _proxy_machine(machine)
 
     candidates: dict[str, float] = {}
-    for (sop, alg), gen in sched.ALGORITHMS.items():
-        if sop != op:
-            continue
-        if alg == "kported" and op == "alltoall" and topo.p > 64:
-            continue  # O(p^2/k) messages; never competitive at pod scale
-        k = min(topo.k_lanes, topo.procs_per_node)
-        try:
-            s = gen(topo, k, c)
-        except Exception:
-            continue
-        candidates[alg] = simulate(s, proxy).time_us
+    for alg in _candidate_algs(op, proxy.topo):
+        t = _sim_payload(op, alg, payload_elems, num_nodes, procs_per_node, k_lanes)
+        if t is not None:
+            candidates[alg] = t
 
     ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
     best, est = ranked[0]
     return Choice(op=op, algorithm=best, est_us=est, candidates=ranked)
 
 
-def crossover_table(op: str, sizes=None, **mesh_kw) -> list[tuple[int, str, float]]:
-    """The size-switched algorithm table for one op — EXPERIMENTS.md exhibit."""
+@functools.lru_cache(maxsize=4096)
+def affine_cost(
+    op: str,
+    alg: str,
+    c_lo: int,
+    c_hi: int,
+    num_nodes: int = 2,
+    procs_per_node: int = 256,
+    k_lanes: int = 8,
+) -> tuple[float, float] | None:
+    """Fit ``time(c) ~= A + B*c`` from two probe payloads.
+
+    Round structure is payload-independent, so within one payload regime the
+    simulated cost is affine in ``c``; the fit is exact at the probes and an
+    interpolation in between (over-estimating at most by the convexity of
+    the piecewise-affine max, which is what the crossover table tolerates).
+    Returns ``(A, B)`` or None if the family cannot be generated.
+    """
+    t_lo = _sim_payload(op, alg, c_lo, num_nodes, procs_per_node, k_lanes)
+    if t_lo is None:
+        return None
+    if c_hi == c_lo:
+        return t_lo, 0.0
+    t_hi = _sim_payload(op, alg, c_hi, num_nodes, procs_per_node, k_lanes)
+    if t_hi is None:
+        return None
+    slope = (t_hi - t_lo) / (c_hi - c_lo)
+    return t_lo - slope * c_lo, slope
+
+
+def crossover_table(
+    op: str,
+    sizes=None,
+    *,
+    num_nodes: int = 2,
+    procs_per_node: int = 256,
+    k_lanes: int = 8,
+) -> list[tuple[int, str, float]]:
+    """The size-switched algorithm table for one op — EXPERIMENTS.md exhibit.
+
+    Simulates each candidate algorithm only at the endpoints of the size
+    sweep and ranks interior sizes from the interpolated affine cost; the
+    full table costs 2 simulations per algorithm regardless of sweep length.
+    """
     if sizes is None:
         sizes = [1 << s for s in range(0, 27, 2)]
+    mesh = {
+        "num_nodes": num_nodes,
+        "procs_per_node": procs_per_node,
+        "k_lanes": k_lanes,
+    }
+    c_lo, c_hi = min(sizes), max(sizes)
+    machine = _machine_for(**mesh)
+    proxy, _ = _proxy_machine(machine)
+    fits: dict[str, tuple[float, float]] = {}
+    for alg in _candidate_algs(op, proxy.topo):
+        fit = affine_cost(op, alg, c_lo, c_hi, **mesh)
+        if fit is not None:
+            fits[alg] = fit
     out = []
     for s in sizes:
-        ch = select(op, s, **mesh_kw)
-        out.append((s, ch.algorithm, ch.est_us))
+        ranked = sorted(((a + b * s, alg) for alg, (a, b) in fits.items()))
+        est, best = ranked[0]
+        out.append((s, best, est))
     return out

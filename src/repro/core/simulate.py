@@ -29,6 +29,18 @@ The model (paper §2.4, made concrete):
 Round time = max over processors and nodes of their completion terms; the
 schedule time is the sum over rounds (rounds are barrier-synchronized, which
 matches the paper's measurement loop).
+
+Two implementations share this model:
+
+* :func:`simulate` — the production path.  It accepts either a legacy
+  ``Schedule`` (compiled on the fly) or a ``CompiledSchedule`` and reduces
+  over the IR's per-round aggregate arrays (``np.bincount`` grids), which is
+  O(numpy) instead of O(Python-per-message).
+* :func:`simulate_msgs` — the original per-``Msg`` reference loop, kept for
+  the block-carrying verification schedules and as the equivalence oracle;
+  ``tests/test_schedule_ir.py`` pins both paths to *identical* ``SimResult``
+  values (every arithmetic expression below is written operation-for-
+  operation like the reference so the floats match bit-exactly).
 """
 
 from __future__ import annotations
@@ -36,10 +48,12 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
+import numpy as np
+
 from repro.core.schedule import Schedule
 from repro.core.topology import Machine
 
-__all__ = ["simulate", "SimResult"]
+__all__ = ["simulate", "simulate_msgs", "SimResult"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +72,87 @@ class SimResult:
         )
 
 
-def simulate(schedule: Schedule, machine: Machine, *, ported: bool = False) -> SimResult:
+def simulate(schedule, machine: Machine, *, ported: bool = False) -> SimResult:
+    """Simulate a schedule (legacy ``Schedule`` or ``CompiledSchedule``)."""
+    from repro.core.schedule_ir import CompiledSchedule, compile_schedule
+
+    if isinstance(schedule, Schedule):
+        schedule = compile_schedule(schedule)
+    if not isinstance(schedule, CompiledSchedule):
+        raise TypeError(f"cannot simulate {type(schedule).__name__}")
+    return _simulate_ir(schedule, machine, ported=ported)
+
+
+def _simulate_ir(cs, machine: Machine, *, ported: bool) -> SimResult:
+    topo, cost = machine.topo, machine.cost
+    k = topo.k_lanes
+    if cs.num_msgs == 0:
+        return SimResult(0.0, cs.num_rounds, 0, 0, 0)
+    st = cs.stats(topo.procs_per_node)
+    R = cs.num_rounds
+
+    # --- per-processor port terms (vectorized over the [R, p] grids) -------
+    # beta/alpha selection matches the reference: the slower network params
+    # apply whenever any of the processor's round traffic is off-node.
+    s_mask = st.send_cnt > 0
+    beta_s = np.where(st.send_inter, cost.beta_inter, cost.beta_intra)
+    alpha_s = np.where(st.send_inter, cost.alpha_inter, cost.alpha_intra)
+    if ported:
+        eff = -(-st.send_cnt // k)  # ceil(nmsgs / k) serial alpha batches
+        denom = np.minimum(st.send_cnt, k)
+        t_send = alpha_s + beta_s * st.send_elems / np.where(denom, denom, 1)
+        t_send = np.maximum(t_send, alpha_s * eff)
+    else:
+        t_send = alpha_s + beta_s * st.send_elems
+    t_send = np.where(s_mask, t_send, 0.0)
+
+    r_mask = st.recv_cnt > 0
+    beta_r = np.where(st.recv_inter, cost.beta_inter, cost.beta_intra)
+    alpha_r = np.where(st.recv_inter, cost.alpha_inter, cost.alpha_intra)
+    if ported:
+        denom = np.minimum(st.recv_cnt, k)
+        t_recv = alpha_r + beta_r * st.recv_elems / np.where(denom, denom, 1)
+    else:
+        t_recv = alpha_r + beta_r * st.recv_elems
+    t_recv = np.where(r_mask, t_recv, 0.0)
+
+    # --- per-node lane bandwidth terms -------------------------------------
+    streams = np.maximum(st.node_out_msgs, st.node_in_msgs)
+    n_mask = streams > 0
+    max_inflight = int(streams.max()) if streams.size else 0
+    t_node = cost.alpha_inter + cost.beta_inter * np.maximum(
+        st.node_out, st.node_in
+    ) / np.minimum(np.maximum(streams, 1), k)
+    t_node = np.where(n_mask, t_node, 0.0)
+
+    # --- shared-memory aggregate cap ---------------------------------------
+    i_mask = st.node_intra_cnt > 0
+    t_intra = cost.alpha_intra + st.node_intra / cost.node_bw_elems
+    t_intra = np.where(i_mask, t_intra, 0.0)
+
+    round_times = np.maximum(
+        np.maximum(t_send.max(axis=1), t_recv.max(axis=1)),
+        np.maximum(t_node.max(axis=1), t_intra.max(axis=1)),
+    )
+    # Sequential accumulation in round order — bit-identical to the
+    # reference's ``total_time += round_time`` loop (np.sum pairs terms).
+    total_time = 0.0
+    for rt in round_times.tolist():
+        total_time += rt
+
+    return SimResult(
+        time_us=total_time,
+        rounds=R,
+        inter_elems=st.inter_elems,
+        intra_elems=st.intra_elems,
+        max_node_inflight=max_inflight,
+    )
+
+
+def simulate_msgs(
+    schedule: Schedule, machine: Machine, *, ported: bool = False
+) -> SimResult:
+    """Reference per-``Msg`` simulation (the original implementation)."""
     topo, cost = machine.topo, machine.cost
     k = topo.k_lanes
     total_time = 0.0

@@ -40,6 +40,25 @@ from repro.models import lm
 from repro.models.params import partition_specs
 from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
 
+
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma=False):
+    """jax.shard_map, failing cleanly on JAX versions without the API.
+
+    The 0.4.x ``jax.experimental.shard_map`` spelling (``auto`` = complement
+    of axis_names, ``check_rep``) is NOT a usable fallback here: compiling a
+    partial-manual program on the pinned jaxlib aborts the process inside
+    XLA, which would take the whole test run down with it.
+    """
+    if not hasattr(jax, "shard_map"):
+        raise NotImplementedError(
+            "make_train_step_shardmap requires jax.shard_map with "
+            "axis_names/check_vma (partial-manual lowering crashes the "
+            "pinned 0.4.x jaxlib); use make_train_step_pjit instead"
+        )
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names=axis_names,
+                         check_vma=check_vma)
+
 __all__ = [
     "dp_axes",
     "mesh_axis_sizes",
@@ -215,7 +234,7 @@ def make_train_step_shardmap(
 
     def jitted(batch_tree):
         bspec_in = jax.tree.map(lambda _: P(dp), batch_tree)
-        inner = jax.shard_map(
+        inner = _shard_map(
             step,
             mesh=mesh,
             in_specs=(rep(pspec), rep(ospec), bspec_in),

@@ -1,5 +1,33 @@
-import jax
+import os
 
 # 8 virtual CPU devices for the shard_map / pjit distribution tests.
 # (The 512-device override is dryrun.py-only, per the launch design.)
-jax.config.update("jax_num_cpu_devices", 8)
+# XLA_FLAGS must be set before jax initializes its backends; the pinned JAX
+# does not recognize the jax_num_cpu_devices config option.
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+import jax
+
+try:
+    jax.config.update("jax_num_cpu_devices", 8)
+except AttributeError:
+    pass  # older JAX: XLA_FLAGS above already forces 8 host devices
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: paper-scale (p=1152) cells excluded from tier-1"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("-m"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: run with -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

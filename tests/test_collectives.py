@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # pinned 0.4.x spells it jax.experimental.shard_map
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as C

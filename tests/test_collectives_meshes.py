@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # pinned 0.4.x spells it jax.experimental.shard_map
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as C
@@ -16,8 +19,11 @@ SHAPES = [(2, 4), (4, 2), (8, 1), (1, 8)]
 
 
 def _mesh(shape):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, ("pod", "lane"))
     return jax.make_mesh(shape, ("pod", "lane"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         axis_types=(axis_type.Auto,) * 2)
 
 
 @pytest.mark.parametrize("shape", SHAPES)

@@ -1,0 +1,189 @@
+"""Compiled schedule IR: exact equivalence with the legacy per-Msg path,
+array-native generator parity, schedule-cache behavior, and the selector's
+affine payload interpolation."""
+
+import numpy as np
+import pytest
+
+from repro.core import schedule as S
+from repro.core import schedule_ir as IR
+from repro.core import selector
+from repro.core.simulate import simulate, simulate_msgs
+from repro.core.topology import Machine, Topology, hydra_machine
+
+M = hydra_machine()
+
+SMALL_TOPOS = [
+    Topology(2, 2, 1),
+    Topology(3, 4, 2),
+    Topology(4, 6, 2),
+    Topology(6, 3, 3),
+]
+
+
+# ---------------------------------------------------------------------------
+# legacy vs vectorized simulate equivalence (exact SimResult match)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", SMALL_TOPOS, ids=lambda t: f"{t.num_nodes}x{t.procs_per_node}")
+@pytest.mark.parametrize("ported", [False, True])
+@pytest.mark.parametrize("op_alg", sorted(S.ALGORITHMS), ids="/".join)
+def test_simulate_equivalence_all_algorithms(topo, ported, op_alg):
+    machine = Machine(topo=topo, cost=M.cost)
+    k = min(2, topo.procs_per_node)
+    sch = S.ALGORITHMS[op_alg](topo, k, 37)
+    want = simulate_msgs(sch, machine, ported=ported)
+    got = simulate(IR.compile_schedule(sch), machine, ported=ported)
+    assert got == want  # exact: identical floats, counts, round totals
+
+
+@pytest.mark.parametrize("topo", SMALL_TOPOS, ids=lambda t: f"{t.num_nodes}x{t.procs_per_node}")
+@pytest.mark.parametrize("op_alg", sorted(IR.IR_GENERATORS), ids="/".join)
+def test_array_native_generators_match_legacy(topo, op_alg):
+    """The *_ir generators must be message-multiset identical per round to
+    the legacy generators (same sim result on every machine mode), without
+    ever building Msg objects."""
+    machine = Machine(topo=topo, cost=M.cost)
+    k = min(2, topo.procs_per_node)
+    legacy = IR.compile_schedule(S.ALGORITHMS[op_alg](topo, k, 37))
+    native = IR.IR_GENERATORS[op_alg](topo, k, 37)
+    assert native.num_rounds == legacy.num_rounds
+    assert native.num_msgs == legacy.num_msgs
+    assert native.total_elems() == legacy.total_elems()
+    # per-round message multisets match exactly
+    for r in range(native.num_rounds):
+        a = slice(native.round_ptr[r], native.round_ptr[r + 1])
+        b = slice(legacy.round_ptr[r], legacy.round_ptr[r + 1])
+        na = np.lexsort((native.elems[a], native.dst[a], native.src[a]))
+        nb = np.lexsort((legacy.elems[b], legacy.dst[b], legacy.src[b]))
+        np.testing.assert_array_equal(native.src[a][na], legacy.src[b][nb])
+        np.testing.assert_array_equal(native.dst[a][na], legacy.dst[b][nb])
+        np.testing.assert_array_equal(native.elems[a][na], legacy.elems[b][nb])
+    for ported in (False, True):
+        assert simulate(native, machine, ported=ported) == simulate_msgs(
+            S.ALGORITHMS[op_alg](topo, k, 37), machine, ported=ported
+        )
+
+
+def test_compile_preserves_structure_metadata():
+    sch = S.kported_scatter(13, 2, 5)
+    cs = IR.compile_schedule(sch)
+    assert (cs.op, cs.algorithm, cs.p, cs.k) == ("scatter", "kported", 13, 2)
+    assert cs.num_rounds == sch.num_rounds
+    assert cs.total_elems() == sch.total_elems()
+    assert cs.max_port_width() == sch.max_port_width()
+
+
+def test_empty_schedule():
+    cs = IR.compile_schedule(S.kported_broadcast(1, 1, 10))
+    assert cs.num_msgs == 0
+    r = simulate(cs, Machine(topo=Topology(1, 1, 1), cost=M.cost))
+    assert r.time_us == 0.0 and r.inter_elems == 0
+
+
+@pytest.mark.slow
+def test_paper_scale_alltoall_exact():
+    """p=1152: the acceptance-criterion cells, exact to the legacy path."""
+    topo = M.topo
+    for op_alg, kk, c in [
+        (("alltoall", "kported"), 6, 869),
+        (("alltoall", "bruck"), 6, 9),
+        (("alltoall", "klane"), 2, 9),
+        (("alltoall", "fulllane"), 2, 9),
+    ]:
+        legacy = simulate_msgs(S.ALGORITHMS[op_alg](topo, kk, c), M)
+        native = simulate(IR.IR_GENERATORS[op_alg](topo, kk, c), M)
+        assert native == legacy, op_alg
+
+
+# ---------------------------------------------------------------------------
+# schedule cache
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_cache_hit_miss():
+    IR.schedule_cache_clear()
+    topo = Topology(2, 4, 2)
+    a = IR.compiled_schedule("alltoall", "bruck", topo, 2, 16)
+    info = IR.schedule_cache_info()
+    assert (info["hits"], info["misses"], info["size"]) == (0, 1, 1)
+    assert info["bytes"] > 0
+    b = IR.compiled_schedule("alltoall", "bruck", topo, 2, 16)
+    assert b is a  # same object: stats cache is shared too
+    assert IR.schedule_cache_info()["hits"] == 1
+    # different payload / k / topo are distinct entries
+    IR.compiled_schedule("alltoall", "bruck", topo, 2, 32)
+    IR.compiled_schedule("alltoall", "bruck", topo, 1, 16)
+    IR.compiled_schedule("alltoall", "bruck", Topology(4, 2, 2), 2, 16)
+    info = IR.schedule_cache_info()
+    assert info["misses"] == 4 and info["size"] == 4
+
+
+def test_cached_stats_reused_across_simulations():
+    IR.schedule_cache_clear()
+    topo = Topology(3, 4, 2)
+    cs = IR.compiled_schedule("alltoall", "fulllane", topo, 2, 8)
+    machine = Machine(topo=topo, cost=M.cost)
+    r1 = simulate(cs, machine)
+    assert topo.procs_per_node in cs._stats
+    r2 = simulate(cs, machine)
+    assert r1 == r2
+
+
+def test_cache_rejects_nonzero_root():
+    with pytest.raises(ValueError):
+        IR.compiled_schedule("broadcast", "kported", Topology(2, 2, 1), 1, 4, root=1)
+
+
+# ---------------------------------------------------------------------------
+# affine payload interpolation (selector fast path)
+# ---------------------------------------------------------------------------
+
+
+def test_affine_interpolation_matches_direct_sim():
+    """Within one payload regime the cost is affine in c: the fit from two
+    probes must agree with a direct simulation at a third payload."""
+    mesh = dict(num_nodes=4, procs_per_node=8, k_lanes=2)
+    for op, alg in [
+        ("alltoall", "bruck"),
+        ("alltoall", "fulllane"),
+        ("scatter", "kported"),
+        ("broadcast", "kported"),
+    ]:
+        c_lo, c_mid, c_hi = 1 << 14, 1 << 16, 1 << 18
+        fit = selector.affine_cost(op, alg, c_lo, c_hi, **mesh)
+        assert fit is not None, (op, alg)
+        a, b = fit
+        direct = selector._sim_payload(op, alg, c_mid, *mesh.values())
+        est = a + b * c_mid
+        assert est == pytest.approx(direct, rel=1e-6), (op, alg, est, direct)
+        # probes are exact by construction
+        assert a + b * c_lo == pytest.approx(
+            selector._sim_payload(op, alg, c_lo, *mesh.values()), rel=1e-12
+        )
+
+
+def test_crossover_table_endpoints_exact_and_interior_ranked():
+    sizes = [1 << 4, 1 << 12, 1 << 24]
+    table = selector.crossover_table("broadcast", sizes=sizes,
+                                     num_nodes=2, procs_per_node=256, k_lanes=8)
+    assert [s for s, _, _ in table] == sizes
+    # endpoint picks must match the exact selector
+    for idx in (0, -1):
+        s, alg, est = table[idx]
+        ch = selector.select("broadcast", s, num_nodes=2,
+                             procs_per_node=256, k_lanes=8)
+        assert alg == ch.algorithm
+        assert est == pytest.approx(ch.est_us, rel=1e-9)
+    assert all(est > 0 for _, _, est in table)
+
+
+def test_crossover_table_regimes():
+    # paper-shaped machine: trees win the latency regime, full-lane the
+    # bandwidth regime (same assertion as the legacy selector test)
+    table = selector.crossover_table(
+        "broadcast", sizes=[1 << 4, 1 << 24],
+        num_nodes=2, procs_per_node=256, k_lanes=8)
+    assert table[0][1] in ("kported", "klane")
+    assert table[1][1] == "fulllane"

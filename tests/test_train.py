@@ -37,6 +37,11 @@ def mesh():
     return make_test_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="jax.shard_map partial-manual API absent on pinned 0.4.x "
+    "(experimental fallback aborts jaxlib during compile)",
+)
 def test_backends_agree(mesh):
     """xla (flat psum) and fulllane (hierarchical) grad sync must produce
     identical training trajectories."""
