@@ -1,12 +1,15 @@
 """Benchmark harness entry point: one section per paper table plus the
-TPU projection, gradient-sync HLO comparison, and the roofline summary.
+optimizer delta table, TPU projection, gradient-sync HLO comparison, and
+the roofline summary.
 
 Prints ``name,impl,k,c,sim_us,paper_us`` CSV rows (and roofline rows from
-the dry-run artifacts when present).  ``--json FILE`` additionally writes
-every simulator cell as machine-readable
-``{table, impl, k, c, sim_us, wall_s}`` records so the perf trajectory of
-the schedule IR is tracked across PRs (``BENCH_schedules.json`` by
-convention).
+the dry-run artifacts when present); the paper section ends with the
+``# optimizer:`` optimized-vs-paper delta lines.  ``--json FILE``
+additionally writes every simulator cell as machine-readable
+``{table, impl, k, c, sim_us, wall_s}`` records — OPT cells carry
+``{base_us, rounds_before, rounds_after, passes}``, the schedule
+optimizer's trajectory — so the perf story is tracked across PRs
+(``BENCH_schedules.json`` by convention).
 
   PYTHONPATH=src python -m benchmarks.run [--skip-hlo] \
       [--only paper|tpu|hlo|roofline] [--json BENCH_schedules.json]
@@ -31,11 +34,17 @@ def main() -> None:
     cells: list[dict] = []
     print("table,impl,k,c,sim_us,paper_us")
     if args.only in (None, "paper"):
-        from benchmarks.paper_tables import ALL_TABLES, csv_row
+        from benchmarks.paper_tables import (
+            ALL_TABLES,
+            csv_row,
+            render_optimizer_deltas,
+        )
         for fn in ALL_TABLES:
             for cell in fn():
                 cells.append(cell)
                 print(csv_row(cell), flush=True)
+        for line in render_optimizer_deltas(cells):
+            print(line, flush=True)
     if args.only in (None, "tpu"):
         from benchmarks.collective_bench import tpu_projection
         from benchmarks.paper_tables import csv_row
@@ -60,7 +69,15 @@ def main() -> None:
         if not emitted:
             print("roofline,,,no dry-run artifacts (run repro.launch.dryrun),,,")
 
-    if args.json:
+    if args.json and not cells:
+        # --only hlo/roofline collect no simulator cells; don't clobber a
+        # previously written trajectory file with an empty one.
+        print(f"# no simulator cells in this selection; {args.json} not written",
+              flush=True)
+    elif args.json:
+        # OPT cells additionally carry the optimizer trajectory: the
+        # unoptimized baseline, the round delta, and the per-pass records.
+        opt_keys = ("base_us", "rounds_before", "rounds_after", "passes")
         payload = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "cells": [
@@ -71,6 +88,7 @@ def main() -> None:
                     "c": c["c"],
                     "sim_us": c["sim_us"],
                     "wall_s": c["wall_s"],
+                    **{k: c[k] for k in opt_keys if k in c},
                 }
                 for c in cells
             ],

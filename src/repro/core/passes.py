@@ -1,0 +1,337 @@
+"""Schedule optimizer: IR rewrite passes over :class:`CompiledSchedule`.
+
+The paper's k-lane adaptations are explicitly non-optimal: the k-lane
+alltoall pays ``(N-1)*n`` rounds of per-round latency even though a node's
+``k`` lanes could carry ``k`` of those steps concurrently, and every
+multi-phase lane algorithm serializes phases that touch disjoint
+processors.  Träff's companion decomposition paper (arXiv:1910.13373)
+shows lane-parallel restructuring recovers most of that gap.  PR 1's
+compiled IR makes such rewrites cheap — a rewrite is array surgery on
+``round_ptr``/message arrays, and re-simulation is O(numpy) — so this
+module adds the missing optimization layer between schedule generation and
+simulation:
+
+    generate -> compile (schedule_ir) -> optimize (this module)
+             -> validate (core.validate) -> simulate (core.simulate)
+
+Passes
+------
+* :class:`CompactRounds` — **lane-aware round compaction**: greedily merge
+  adjacent rounds while (a) no processor exceeds the port budget (``limit=1``
+  keeps the schedule strictly lane-legal; ``limit=k`` targets the k lanes a
+  node can drive — the merged schedule posts up to k concurrent non-blocking
+  sends per processor, the paper's own "more non-blocking operations is
+  beneficial" observation) and (b) no message depends on a block acquired
+  in the same merged round (the no-intra-round-forwarding rule, checked on
+  the IR's block arrays).  Compaction is provably never slower under the
+  simulator's cost model: every per-round term is subadditive under round
+  union, so the merged round costs at most the sum of its parts and saves
+  the per-round alphas.
+* :class:`CoalesceMessages` — fuse same-``(src, dst)`` messages within a
+  round into one message (summed elems, concatenated blocks).  This trades
+  per-message overhead against the lane model's stream count — fewer
+  streams can mean fewer active lanes — so it is *not* monotone; run it
+  under ``policy="improved"`` to keep it only when it helps.
+
+:class:`PassManager` composes passes, records per-pass round/message/time
+deltas (the optimizer trajectory surfaced by ``benchmarks.run --json``),
+reverts non-improving passes under ``policy="improved"``, and — because an
+optimizer that silently corrupts a schedule is worse than no optimizer —
+can machine-check every rewrite with the array-native validity oracle
+(:func:`repro.core.validate.validate_schedule`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.schedule_ir import CompiledSchedule
+from repro.core.simulate import simulate
+from repro.core.topology import Machine
+from repro.core.validate import initial_holds, validate_schedule
+
+__all__ = [
+    "CompactRounds",
+    "CoalesceMessages",
+    "PassRecord",
+    "PassManager",
+    "optimize_schedule",
+    "OPT_MODES",
+]
+
+
+# ---------------------------------------------------------------------------
+# Passes.  A pass is any object with .name and .apply(cs) -> CompiledSchedule
+# (pure: the input schedule is never mutated).
+# ---------------------------------------------------------------------------
+
+
+class CompactRounds:
+    """Greedy adjacent-round merging under a port budget + data-flow rule.
+
+    ``limit`` is the max concurrent sends (and receives) per processor in a
+    merged round: 1 keeps lane-legality, ``None`` resolves to the
+    schedule's own ``k`` (lane-aware: a node's k lanes are saturated by k
+    concurrent streams, so merging past k buys no bandwidth, only queueing).
+
+    Merging moves messages to *earlier* rounds only, so the single causal
+    hazard is a message landing in the same merged round as an acquisition
+    it depends on; the pass consults the IR block arrays and refuses such
+    merges.  Requires block metadata (``cs.has_blocks``).
+    """
+
+    def __init__(self, limit: int | None = None):
+        self.limit = limit
+        self.name = f"compact_rounds[limit={'k' if limit is None else limit}]"
+
+    def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        if not cs.has_blocks:
+            raise ValueError(
+                "CompactRounds needs block metadata to check round-merge "
+                "causality; generate the schedule with blocks"
+            )
+        limit = max(self.limit if self.limit is not None else cs.k, 1)
+        p, R = cs.p, cs.num_rounds
+        if R <= 1:
+            return cs
+        nblk = np.diff(cs.blk_ptr)
+        # per-block-hop keys (same encoding as the validity oracle)
+        if cs.blk_ids.size:
+            bmin = int(cs.blk_ids.min())
+            bspan = int(cs.blk_ids.max()) - bmin + 1
+        else:
+            bmin, bspan = 0, 1
+        req_key = np.repeat(cs.src, nblk) * bspan + (cs.blk_ids - bmin)
+        acq_key = np.repeat(cs.dst, nblk) * bspan + (cs.blk_ids - bmin)
+        analytic = initial_holds(
+            cs.op, p, np.repeat(cs.src, nblk), cs.blk_ids
+        )
+        # messages are round-contiguous, so block offsets at round
+        # boundaries come straight off the CSR
+        hop_ptr = cs.blk_ptr[cs.round_ptr]
+
+        boundaries = [0]  # round indices starting a merged round
+        send = np.zeros(p, dtype=np.int64)
+        recv = np.zeros(p, dtype=np.int64)
+        open_acq = np.empty(0, dtype=np.int64)  # sorted keys acquired in group
+        open_started = False
+        for r in range(R):
+            a, b = cs.round_ptr[r], cs.round_ptr[r + 1]
+            if a == b:
+                continue  # empty round: merges into anything, emits nothing
+            ha, hb = hop_ptr[r], hop_ptr[r + 1]
+            s_cnt = np.bincount(cs.src[a:b], minlength=p)
+            r_cnt = np.bincount(cs.dst[a:b], minlength=p)
+            if open_started:
+                fits = (
+                    int((send + s_cnt).max()) <= limit
+                    and int((recv + r_cnt).max()) <= limit
+                )
+                if fits and open_acq.size:
+                    need = req_key[ha:hb][~analytic[ha:hb]]
+                    if need.size:
+                        i = np.searchsorted(open_acq, need)
+                        i = np.minimum(i, open_acq.size - 1)
+                        fits = not bool((open_acq[i] == need).any())
+            else:
+                fits = False
+            if fits:
+                send += s_cnt
+                recv += r_cnt
+            else:
+                boundaries.append(r)
+                send, recv = s_cnt, r_cnt
+                open_acq = np.empty(0, dtype=np.int64)
+                open_started = True
+            open_acq = np.union1d(open_acq, acq_key[ha:hb])
+        # boundaries[0] is a sentinel; drop it if the first nonempty round
+        # re-appended itself (it always does unless the schedule is empty).
+        starts = boundaries[1:] if len(boundaries) > 1 else []
+        if not starts:  # all rounds empty
+            new_ptr = np.array([0, cs.num_msgs], dtype=np.int64)
+        else:
+            new_ptr = np.concatenate(
+                [cs.round_ptr[starts], [cs.num_msgs]]
+            ).astype(np.int64)
+        return dataclasses.replace(cs, round_ptr=new_ptr, _stats={})
+
+
+class CoalesceMessages:
+    """Fuse same-(src, dst) messages within each round: one message with
+    the summed element count and the concatenated (re-sorted) block set.
+    Changes the node stream count, so gate it behind ``policy="improved"``
+    when stream count feeds the lane bandwidth term."""
+
+    name = "coalesce_messages"
+
+    def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        if cs.num_msgs == 0:
+            return cs
+        p = cs.p
+        rid = cs.round_ids()
+        key = (rid * p + cs.src) * p + cs.dst
+        order = np.argsort(key, kind="stable")
+        sk = key[order]
+        first = np.ones(sk.size, dtype=bool)
+        first[1:] = sk[1:] != sk[:-1]
+        starts = np.flatnonzero(first)
+        if starts.size == cs.num_msgs:
+            return cs  # nothing to fuse
+        new_src = cs.src[order][starts]
+        new_dst = cs.dst[order][starts]
+        new_rid = rid[order][starts]
+        new_elems = np.add.reduceat(cs.elems[order], starts)
+        new_ptr = np.zeros(cs.num_rounds + 1, dtype=np.int64)
+        np.cumsum(
+            np.bincount(new_rid, minlength=cs.num_rounds), out=new_ptr[1:]
+        )
+        blk_ptr = blk_ids = None
+        if cs.has_blocks:
+            nblk = np.diff(cs.blk_ptr)
+            seg_starts = cs.blk_ptr[:-1]
+            # gather block segments in fused-message order
+            g_counts = nblk[order]
+            total = int(g_counts.sum())
+            base = np.repeat(seg_starts[order], g_counts)
+            off = np.arange(total, dtype=np.int64) - np.repeat(
+                np.cumsum(g_counts) - g_counts, g_counts
+            )
+            flat = cs.blk_ids[base + off]
+            fused_counts = np.add.reduceat(g_counts, starts)
+            seg_id = np.repeat(
+                np.arange(fused_counts.size, dtype=np.int64), fused_counts
+            )
+            flat = flat[np.lexsort((flat, seg_id))]  # canonical per message
+            blk_ptr = np.zeros(fused_counts.size + 1, dtype=np.int64)
+            np.cumsum(fused_counts, out=blk_ptr[1:])
+            blk_ids = flat
+        return dataclasses.replace(
+            cs,
+            src=new_src,
+            dst=new_dst,
+            elems=new_elems,
+            round_ptr=new_ptr,
+            blk_ptr=blk_ptr,
+            blk_ids=blk_ids,
+            _stats={},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pass manager.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PassRecord:
+    """Per-pass delta, the optimizer-trajectory unit surfaced in
+    BENCH_schedules.json."""
+
+    name: str
+    applied: bool
+    rounds_before: int
+    rounds_after: int
+    msgs_before: int
+    msgs_after: int
+    time_before_us: float | None
+    time_after_us: float | None
+    wall_s: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PassManager:
+    """Compose rewrite passes with delta accounting and optional reverts.
+
+    ``policy="always"`` keeps every pass result; ``policy="improved"``
+    (requires ``machine``) re-simulates after each pass and reverts it when
+    strictly slower.  ``validate=True`` runs the validity oracle after
+    every kept pass and raises if a rewrite broke data-flow — optimized
+    schedules are machine-checked, never trusted.
+    """
+
+    def __init__(
+        self,
+        passes: Sequence,
+        *,
+        machine: Machine | None = None,
+        ported: bool = False,
+        policy: str = "always",
+        validate: bool = False,
+    ):
+        if policy not in ("always", "improved"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if policy == "improved" and machine is None:
+            raise ValueError('policy="improved" needs a machine to time on')
+        self.passes = list(passes)
+        self.machine = machine
+        self.ported = ported
+        self.policy = policy
+        self.validate = validate
+
+    def _time(self, cs: CompiledSchedule) -> float | None:
+        if self.machine is None:
+            return None
+        return simulate(cs, self.machine, ported=self.ported).time_us
+
+    def run(
+        self, cs: CompiledSchedule
+    ) -> tuple[CompiledSchedule, list[PassRecord]]:
+        records: list[PassRecord] = []
+        t_cur = self._time(cs)
+        for ps in self.passes:
+            t0 = time.perf_counter()
+            new = ps.apply(cs)
+            t_new = self._time(new)
+            keep = self.policy == "always" or t_new <= t_cur
+            if keep and self.validate and new is not cs:
+                validate_schedule(new, raise_on_error=True)
+            records.append(
+                PassRecord(
+                    name=getattr(ps, "name", type(ps).__name__),
+                    applied=keep,
+                    rounds_before=cs.num_rounds,
+                    rounds_after=new.num_rounds,
+                    msgs_before=cs.num_msgs,
+                    msgs_after=new.num_msgs,
+                    time_before_us=t_cur,
+                    time_after_us=t_new,
+                    wall_s=time.perf_counter() - t0,
+                )
+            )
+            if keep:
+                cs, t_cur = new, t_new
+        return cs, records
+
+
+#: optimize= knob values -> pass pipeline factory (compaction only: its
+#: merge decisions are payload-independent, which keeps the selector's
+#: affine A + B*c interpolation exact for opt: candidates).
+OPT_MODES: dict[str, Callable[[], list]] = {
+    "lane": lambda: [CompactRounds(limit=1)],
+    "ported": lambda: [CompactRounds(limit=None)],
+}
+
+
+def optimize_schedule(
+    cs: CompiledSchedule,
+    mode: str = "ported",
+    *,
+    machine: Machine | None = None,
+    validate: bool = True,
+) -> tuple[CompiledSchedule, list[PassRecord]]:
+    """One-call optimizer entry: run the ``mode`` pipeline, oracle-check the
+    result, return ``(optimized, records)``."""
+    try:
+        pipeline = OPT_MODES[mode]()
+    except KeyError:
+        raise ValueError(
+            f"unknown optimize mode {mode!r}; expected one of {sorted(OPT_MODES)}"
+        ) from None
+    pm = PassManager(pipeline, machine=machine, validate=validate)
+    return pm.run(cs)

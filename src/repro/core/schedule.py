@@ -35,6 +35,21 @@ Generators implement the algorithms of paper §2 verbatim:
       scatters (round and volume optimal).
     * ``fulllane_alltoall``  — on-node combining alltoall, n concurrent
       node-level alltoalls (all data communicated twice).
+
+Pipeline position
+-----------------
+This module is the *generation* stage of the schedule pipeline
+
+    generate (here) -> compile (core.schedule_ir) -> optimize (core.passes)
+                    -> validate (core.validate)   -> simulate (core.simulate)
+
+The generators stay paper-verbatim on purpose: the paper's explicitly
+non-optimal round structures (e.g. the k-lane alltoall's (N-1)*n step
+latency) are reproduced here and *improved* downstream by the optimizer
+passes, so every delta between "paper" and "optimized" is attributable and
+machine-checked.  The per-``Msg`` verifiers below remain the ground-truth
+oracle that ``core.validate``'s array-native data-flow check is pinned
+against in tests.
 """
 
 from __future__ import annotations

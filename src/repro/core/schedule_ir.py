@@ -17,24 +17,38 @@ Two entry points produce the IR:
   (``kported``, ``bruck``, ``klane``, ``fulllane``) directly as arrays and
   never construct a single ``Msg``.  They are round-for-round,
   message-multiset-identical to their legacy counterparts (pinned by
-  ``tests/test_schedule_ir.py``).
+  ``tests/test_schedule_ir.py``) — including the per-message block CSR.
+
+The IR is the *compile* stage of the schedule pipeline
+
+    generate (core.schedule) -> compile (here) -> optimize (core.passes)
+                             -> validate (core.validate) -> simulate
+
+``compiled_schedule(..., optimize="lane"|"ported")`` hands the cached IR to
+the optimizer's round-compaction pipeline and caches the (oracle-validated)
+rewrite under its own key.
 
 Block-metadata ownership rules
 ------------------------------
-The IR deliberately carries **no per-message block sets**.  Abstract block
-ids exist to *verify* schedules by data-flow execution
-(``schedule.verify_broadcast`` et al.), which is inherently per-message and
-stays on the legacy ``Msg`` path.  The IR owns only what the cost model
-needs: message endpoints, element counts, round structure, and derived
-aggregates.  Consequently:
+The IR carries per-message abstract block ids in **CSR form**:
+``blk_ptr[i]:blk_ptr[i+1]`` delimits message ``i``'s slice of ``blk_ids``
+(ids sorted ascending within a message — the canonical order, matching the
+legacy ``tuple(sorted(blocks))`` convention).  Block metadata is what makes
+a schedule *checkable*: the array-native validity oracle
+(:mod:`repro.core.validate`) replays data-flow over these arrays with two
+sorts instead of per-message set updates, and the optimizer passes
+(:mod:`repro.core.passes`) consult them to keep round merges causally
+legal.  Rules:
 
-* anything that needs ``Msg.blocks`` (verification, ppermute compilation in
-  ``core.collectives``) must generate the legacy ``Schedule``;
-* ``compile_schedule`` drops block metadata irreversibly — the IR cannot be
-  decompiled back to a verifiable schedule;
-* the ``*_ir`` generators are trusted because their round/message structure
-  is pinned against the verified legacy generators by tests, not because
-  they can be re-verified directly.
+* the ``*_ir`` generators always attach blocks (array-natively — no Msg
+  objects); ``compile_schedule(..., with_blocks=True)`` flattens legacy
+  ``Msg.blocks`` into the same canonical form;
+* ``compile_schedule`` without ``with_blocks`` still drops the metadata
+  (cheapest path when only the cost model is needed); schedules without
+  blocks cannot be validated or safely rewritten — ``validate`` and the
+  compaction pass refuse them rather than trust them;
+* ppermute compilation in ``core.collectives`` remains on the legacy
+  ``Msg`` path (it needs per-message python tuples anyway).
 
 Topology-dependent per-round statistics (node classification of each
 message) are cached on the compiled schedule per ``procs_per_node``, so
@@ -120,11 +134,20 @@ class CompiledSchedule:
     dst: np.ndarray  # int64 [M]
     elems: np.ndarray  # int64 [M]
     round_ptr: np.ndarray  # int64 [R+1]
+    # optional CSR block metadata: message i carries blk_ids[blk_ptr[i]:
+    # blk_ptr[i+1]] (sorted ascending within the message).  None on
+    # schedules compiled without blocks; required by validate/passes.
+    blk_ptr: np.ndarray | None = None  # int64 [M+1]
+    blk_ids: np.ndarray | None = None  # int64 [sum(nblocks)]
     # per-procs_per_node derived statistics (lazily built, shared across
     # simulations of the same structure under different cost params).
     _stats: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+
+    @property
+    def has_blocks(self) -> bool:
+        return self.blk_ptr is not None and self.blk_ids is not None
 
     @property
     def num_rounds(self) -> int:
@@ -235,22 +258,43 @@ class CompiledSchedule:
 # ---------------------------------------------------------------------------
 
 
-def compile_schedule(schedule: sched.Schedule) -> CompiledSchedule:
-    """Flatten a legacy ``Schedule`` into the array IR (drops block ids)."""
+def compile_schedule(
+    schedule: sched.Schedule, *, with_blocks: bool = False
+) -> CompiledSchedule:
+    """Flatten a legacy ``Schedule`` into the array IR.
+
+    ``with_blocks=True`` additionally flattens every ``Msg.blocks`` tuple
+    into the CSR block arrays (sorted ascending per message), making the
+    result consumable by the validity oracle and the optimizer passes.
+    """
     counts = [len(r.msgs) for r in schedule.rounds]
     m = sum(counts)
     src = np.empty(m, dtype=np.int64)
     dst = np.empty(m, dtype=np.int64)
     elems = np.empty(m, dtype=np.int64)
+    nblk = np.empty(m, dtype=np.int64) if with_blocks else None
+    blk_chunks: list = []
     i = 0
     for r in schedule.rounds:
         for msg in r.msgs:
             src[i] = msg.src
             dst[i] = msg.dst
             elems[i] = msg.elems
+            if with_blocks:
+                nblk[i] = len(msg.blocks)
+                blk_chunks.append(sorted(msg.blocks))
             i += 1
     round_ptr = np.zeros(len(counts) + 1, dtype=np.int64)
     np.cumsum(counts, out=round_ptr[1:])
+    blk_ptr = blk_ids = None
+    if with_blocks:
+        blk_ptr = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(nblk, out=blk_ptr[1:])
+        blk_ids = (
+            np.concatenate([np.asarray(b, dtype=np.int64) for b in blk_chunks])
+            if blk_chunks
+            else np.empty(0, dtype=np.int64)
+        )
     return CompiledSchedule(
         op=schedule.op,
         algorithm=schedule.algorithm,
@@ -260,13 +304,24 @@ def compile_schedule(schedule: sched.Schedule) -> CompiledSchedule:
         dst=dst,
         elems=elems,
         round_ptr=round_ptr,
+        blk_ptr=blk_ptr,
+        blk_ids=blk_ids,
     )
 
 
 def _from_rounds(
-    op: str, algorithm: str, p: int, k: int, rounds: list[tuple]
+    op: str,
+    algorithm: str,
+    p: int,
+    k: int,
+    rounds: list[tuple],
+    blocks: list[tuple] | None = None,
 ) -> CompiledSchedule:
-    """Assemble a CompiledSchedule from per-round (src, dst, elems) triples."""
+    """Assemble a CompiledSchedule from per-round (src, dst, elems) triples.
+
+    ``blocks`` (parallel to ``rounds``) holds per-round ``(counts, flat)``
+    pairs: ``counts[i]`` block ids per message, concatenated in ``flat``.
+    """
     if rounds:
         src = np.concatenate([r[0] for r in rounds])
         dst = np.concatenate([r[1] for r in rounds])
@@ -275,6 +330,21 @@ def _from_rounds(
         src = dst = elems = np.empty(0, dtype=np.int64)
     round_ptr = np.zeros(len(rounds) + 1, dtype=np.int64)
     np.cumsum([r[0].size for r in rounds], out=round_ptr[1:])
+    blk_ptr = blk_ids = None
+    if blocks is not None:
+        counts = (
+            np.concatenate([b[0] for b in blocks])
+            if blocks
+            else np.empty(0, dtype=np.int64)
+        )
+        blk_ids = (
+            np.concatenate([b[1] for b in blocks])
+            if blocks
+            else np.empty(0, dtype=np.int64)
+        )
+        blk_ptr = np.zeros(counts.size + 1, dtype=np.int64)
+        np.cumsum(counts, out=blk_ptr[1:])
+        blk_ids = blk_ids.astype(np.int64)
     return CompiledSchedule(
         op=op,
         algorithm=algorithm,
@@ -284,6 +354,8 @@ def _from_rounds(
         dst=dst.astype(np.int64),
         elems=elems.astype(np.int64),
         round_ptr=round_ptr,
+        blk_ptr=blk_ptr,
+        blk_ids=blk_ids,
     )
 
 
@@ -294,6 +366,12 @@ def _from_rounds(
 # ---------------------------------------------------------------------------
 
 
+def _direct_blocks(p: int, src: np.ndarray, dst: np.ndarray) -> tuple:
+    """Per-round block CSR for direct alltoall messages: each message
+    carries exactly its (src -> dst) pair block."""
+    return np.ones(src.size, dtype=np.int64), src * p + dst
+
+
 def kported_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
     """Direct alltoall (paper §2.1): ceil((p-1)/k) rounds of k shifted sends.
 
@@ -302,6 +380,7 @@ def kported_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
     """
     procs = np.arange(p, dtype=np.int64)
     rounds = []
+    blocks = []
     offset = 1
     while offset < p:
         ds = np.arange(offset, min(offset + k, p), dtype=np.int64)
@@ -309,8 +388,9 @@ def kported_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
         dst = (src + np.repeat(ds, p)) % p
         elems = np.full(src.size, c, dtype=np.int64)
         rounds.append((src, dst, elems))
+        blocks.append(_direct_blocks(p, src, dst))
         offset += k
-    return _from_rounds("alltoall", "kported", p, k, rounds)
+    return _from_rounds("alltoall", "kported", p, k, rounds, blocks)
 
 
 def bruck_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
@@ -323,10 +403,18 @@ def bruck_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
     offsets ``o..o+radix_pow-1`` that have collapsed onto it).  Processor q
     sends one message per nonzero digit value d of offset-digit t, carrying
     every pooled block whose digit is d, to ``(q + d*radix_pow) mod p``.
+
+    Blocks are reconstructed analytically too: a block (a -> b) with
+    original offset ``o0 = (b - a) mod p`` sits, at the phase clearing digit
+    t, on processor ``q = (a + o0 mod radix_pow) mod p`` with collapsed
+    offset ``o = o0 - o0 mod radix_pow``; the pooled blocks at (q, o) are
+    ``{((q - low) mod p, (q + o) mod p) : low < pooled(o)}`` — common
+    destination, ``pooled`` distinct sources.
     """
     r = k + 1
     procs = np.arange(p, dtype=np.int64)
     rounds = []
+    blocks = []
     radix_pow = 1
     while radix_pow < p:
         offs = np.arange(0, p, radix_pow, dtype=np.int64)
@@ -344,6 +432,27 @@ def bruck_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
                 (c * nblk[d_arr]).astype(np.int64), p
             )
             rounds.append((src, dst, elems))
+            # --- per-message blocks (see docstring derivation) ------------
+            m = digit > 0
+            order = np.argsort(digit[m], kind="stable")  # digit-major, o asc
+            o_ord = offs[m][order]
+            pool_ord = pooled[m][order]
+            hops = int(pool_ord.sum())
+            rep_o = np.repeat(o_ord, pool_ord)
+            starts = np.cumsum(pool_ord) - pool_ord
+            rep_low = np.arange(hops, dtype=np.int64) - np.repeat(starts, pool_ord)
+            # [p, hops]: row q = its blocks in (digit, o, low) template order
+            blk_mat = ((procs[:, None] - rep_low[None, :]) % p) * p + (
+                (procs[:, None] + rep_o[None, :]) % p
+            )
+            cnt_d = np.bincount(
+                digit[m], weights=pooled[m].astype(np.float64), minlength=r
+            ).astype(np.int64)
+            counts = np.tile(cnt_d[d_arr], p)  # q-major, digit-minor
+            flat = blk_mat.ravel()
+            seg = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+            flat = flat[np.lexsort((flat, seg))]  # canonical: ascending/msg
+            blocks.append((counts, flat))
         else:
             rounds.append(
                 (
@@ -352,8 +461,11 @@ def bruck_alltoall_ir(p: int, k: int, c: int) -> CompiledSchedule:
                     np.empty(0, dtype=np.int64),
                 )
             )
+            blocks.append(
+                (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
+            )
         radix_pow *= r
-    return _from_rounds("alltoall", "bruck", p, k, rounds)
+    return _from_rounds("alltoall", "bruck", p, k, rounds, blocks)
 
 
 def klane_alltoall_ir(topo: Topology, c: int) -> CompiledSchedule:
@@ -365,15 +477,18 @@ def klane_alltoall_ir(topo: Topology, c: int) -> CompiledSchedule:
     v, j = idx // n, idx % n
     elems = np.full(p, c, dtype=np.int64)
     rounds = []
+    blocks = []
     for t in range(1, N):
         w = (v + t) % N
         for s in range(n):
             dst = w * n + (j + s) % n
             rounds.append((idx, dst, elems))
+            blocks.append(_direct_blocks(p, idx, dst))
     for s in range(1, n):
         dst = v * n + (j + s) % n
         rounds.append((idx, dst, elems))
-    return _from_rounds("alltoall", "klane", p, topo.k_lanes, rounds)
+        blocks.append(_direct_blocks(p, idx, dst))
+    return _from_rounds("alltoall", "klane", p, topo.k_lanes, rounds, blocks)
 
 
 def fulllane_alltoall_ir(topo: Topology, c: int) -> CompiledSchedule:
@@ -383,15 +498,31 @@ def fulllane_alltoall_ir(topo: Topology, c: int) -> CompiledSchedule:
     idx = np.arange(p, dtype=np.int64)
     v, j = idx // n, idx % n
     rounds = []
+    blocks = []
     elems_a = np.full(p, c * N, dtype=np.int64)
+    cnt_a = np.full(p, N, dtype=np.int64)
     for s in range(1, n):
         dst = v * n + (j + s) % n
         rounds.append((idx, dst, elems_a))
+        # (v, j) -> (v, l): blocks src*p + rank(w, l) for all nodes w
+        flat = (
+            idx[:, None] * p
+            + np.arange(N, dtype=np.int64)[None, :] * n
+            + (dst % n)[:, None]
+        ).ravel()
+        blocks.append((cnt_a, flat))
     elems_b = np.full(p, c * n, dtype=np.int64)
+    cnt_b = np.full(p, n, dtype=np.int64)
     for t in range(1, N):
         dst = ((v + t) % N) * n + j
         rounds.append((idx, dst, elems_b))
-    return _from_rounds("alltoall", "fulllane", p, topo.k_lanes, rounds)
+        # (v, l) -> (w, l): node-combined blocks rank(v, j')*p + dst, all j'
+        flat = (
+            (v[:, None] * n + np.arange(n, dtype=np.int64)[None, :]) * p
+            + dst[:, None]
+        ).ravel()
+        blocks.append((cnt_b, flat))
+    return _from_rounds("alltoall", "fulllane", p, topo.k_lanes, rounds, blocks)
 
 
 #: (op, algorithm) -> array-native generator with the ALGORITHMS signature.
@@ -413,12 +544,17 @@ _CACHE_MISSES = 0
 _CACHE_MAX = 512
 # Paper-scale alltoall entries cost tens of MB each (message arrays plus the
 # lazily-built [R, p] stats grids), so bound resident bytes as well as count;
-# insertion evicts oldest-first (FIFO) until both bounds hold.
+# insertion evicts oldest-first (FIFO) until both bounds hold.  The bound is
+# only enforced at insertion: stats grids built *after* an entry is cached
+# grow resident bytes past the cap until the next insertion re-measures
+# (acceptable overshoot — one klane p=1152 stats set is ~120 MB).
 _CACHE_MAX_BYTES = 512 * 1024 * 1024
 
 
 def _entry_bytes(cs: CompiledSchedule) -> int:
     n = cs.src.nbytes + cs.dst.nbytes + cs.elems.nbytes + cs.round_ptr.nbytes
+    if cs.has_blocks:
+        n += cs.blk_ptr.nbytes + cs.blk_ids.nbytes
     for st in cs._stats.values():
         for f in dataclasses.fields(st):
             v = getattr(st, f.name)
@@ -428,16 +564,30 @@ def _entry_bytes(cs: CompiledSchedule) -> int:
 
 
 def compiled_schedule(
-    op: str, algorithm: str, topo: Topology, k: int, c: int, root: int = 0
+    op: str,
+    algorithm: str,
+    topo: Topology,
+    k: int,
+    c: int,
+    root: int = 0,
+    *,
+    optimize: str | None = None,
 ) -> CompiledSchedule:
     """Cached compiled schedule for an ``ALGORITHMS`` family.
 
     Alltoall families come from the array-native generators; the tree
     families (O(p log p) messages) generate the legacy schedule and compile
-    it.  Cached process-wide keyed by ``(op, algorithm, topo, k, c, root)``
-    — cached entries share their lazily-built per-topology round statistics,
-    so re-simulating a cached schedule under the same machine shape is pure
-    array arithmetic.
+    it.  Cached process-wide keyed by ``(op, algorithm, topo, k, c, root,
+    optimize)`` — cached entries share their lazily-built per-topology round
+    statistics, so re-simulating a cached schedule under the same machine
+    shape is pure array arithmetic.
+
+    ``optimize`` selects an optimizer pipeline from
+    :data:`repro.core.passes.OPT_MODES` (``"lane"`` keeps strict
+    lane-legality, ``"ported"`` compacts up to port width k); the optimized
+    schedule is validated by the array-native oracle before it enters the
+    cache.  Compaction decisions are payload-independent, so optimized
+    entries keep the affine-in-``c`` cost property the selector relies on.
     """
     global _CACHE_HITS, _CACHE_MISSES
     key = (
@@ -449,6 +599,7 @@ def compiled_schedule(
         k,
         c,
         root,
+        optimize,
     )
     hit = _CACHE.get(key)
     if hit is not None:
@@ -457,12 +608,18 @@ def compiled_schedule(
     _CACHE_MISSES += 1
     if root != 0:
         raise ValueError("the ALGORITHMS registry generates root=0 schedules")
-    gen = IR_GENERATORS.get((op, algorithm))
-    if gen is not None:
-        cs = gen(topo, k, c)
+    if optimize is not None:
+        from repro.core.passes import optimize_schedule
+
+        base = compiled_schedule(op, algorithm, topo, k, c, root)
+        cs, _ = optimize_schedule(base, optimize, validate=True)
     else:
-        legacy = sched.ALGORITHMS[(op, algorithm)](topo, k, c)
-        cs = compile_schedule(legacy)
+        gen = IR_GENERATORS.get((op, algorithm))
+        if gen is not None:
+            cs = gen(topo, k, c)
+        else:
+            legacy = sched.ALGORITHMS[(op, algorithm)](topo, k, c)
+            cs = compile_schedule(legacy, with_blocks=True)
     new_bytes = _entry_bytes(cs)
     while _CACHE and (
         len(_CACHE) >= _CACHE_MAX

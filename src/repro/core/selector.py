@@ -24,7 +24,13 @@ Hot-path design (the serving/training loop calls this online):
   just *two* probe payloads and interpolates ``A + B*c``;
   ``crossover_table`` uses the probes at the endpoints of the requested size
   sweep, so the table costs 2 simulations per algorithm instead of one per
-  (algorithm, size) cell, with the endpoint cells exact by construction.
+  (algorithm, size) cell, with the endpoint cells exact by construction;
+* every family also enters the race as an ``opt:``-prefixed candidate — the
+  schedule-optimizer rewrite (``core.passes`` round compaction, validated
+  by the ``core.validate`` oracle) — so the table reflects what a tuned
+  library could actually run, not just the paper's verbatim schedules.
+  Compaction decisions are payload-independent, so ``opt:`` candidates keep
+  the affine-in-``c`` property the probe interpolation relies on.
 """
 
 from __future__ import annotations
@@ -70,6 +76,9 @@ def _machine_for(num_nodes: int, procs_per_node: int, k_lanes: int) -> Machine:
 
 
 def _candidate_algs(op: str, topo: Topology) -> list[str]:
+    """Base families plus their ``opt:``-prefixed rewrites (the schedule
+    optimizer's round-compacted variants, which can flip the paper's
+    crossover points in the latency regime)."""
     from repro.core.schedule import ALGORITHMS
 
     algs = []
@@ -79,7 +88,15 @@ def _candidate_algs(op: str, topo: Topology) -> list[str]:
         if alg == "kported" and op == "alltoall" and topo.p > 64:
             continue  # O(p^2/k) messages; never competitive at pod scale
         algs.append(alg)
+        algs.append(f"opt:{alg}")
     return algs
+
+
+def _parse_alg(alg: str) -> tuple[str, str | None]:
+    """``"opt:klane"`` -> ``("klane", "ported")``; plain names pass through."""
+    if alg.startswith("opt:"):
+        return alg[4:], "ported"
+    return alg, None
 
 
 @functools.lru_cache(maxsize=8192)
@@ -98,10 +115,13 @@ def _sim_payload(
     topo = proxy.topo
     c = max(1, int(payload_elems / scale)) if op != "broadcast" else payload_elems
     k = min(topo.k_lanes, topo.procs_per_node)
+    base_alg, optimize = _parse_alg(alg)
     try:
-        cs = compiled_schedule(op, alg, topo, k, c)
+        cs = compiled_schedule(op, base_alg, topo, k, c, optimize=optimize)
+    except AssertionError:
+        raise  # validity-oracle failure on an opt: rewrite — never swallow
     except Exception:
-        return None
+        return None  # family not generatable at this topology
     return simulate(cs, proxy).time_us
 
 

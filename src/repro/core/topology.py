@@ -15,10 +15,12 @@ We parameterize communication with a hierarchical alpha-beta model:
 * ``node_bw_elems``                 — aggregate shared-memory elements/us cap
   (models the paper's open question about concurrent on-node bandwidth).
 
-Two presets are shipped: ``HYDRA`` (calibrated against the paper's own
-36x32-core dual-OmniPath measurements, Tables 2-7) and ``TPU_V5E`` (a pod
+Three presets are shipped: ``HYDRA`` (calibrated against the paper's own
+36x32-core dual-OmniPath measurements, Tables 2-7), ``TPU_V5E`` (a pod
 viewed through the paper's glasses: "node" = pod, "lane" = concurrent
-inter-pod DCN streams, on-node = intra-pod ICI).
+inter-pod DCN streams, on-node = intra-pod ICI), and ``NVLINK_IB``
+(GPU/NCCL: "node" = 8-GPU NVSwitch box, "lane" = IB rail — the second
+machine model for the schedule optimizer and selector).
 """
 
 from __future__ import annotations
@@ -32,8 +34,10 @@ __all__ = [
     "Machine",
     "HYDRA",
     "TPU_V5E",
+    "NVLINK_IB",
     "hydra_machine",
     "tpu_v5e_machine",
+    "nvlink_ib_machine",
 ]
 
 
@@ -158,6 +162,43 @@ def tpu_v5e_machine(num_pods: int = 2, k_lanes: int = 8) -> Machine:
     return Machine(
         topo=Topology(num_nodes=num_pods, procs_per_node=256, k_lanes=k_lanes),
         cost=TPU_V5E.cost,
+    )
+
+
+# GPU/NCCL cluster through the paper's glasses: "node" = one 8-GPU NVSwitch
+# box, "proc" = a GPU, "lane" = an InfiniBand rail (rail-optimized fabrics
+# ship 1..8 HCAs per node — exactly the paper's k).  Calibration against
+# published NCCL curves: ~5 us small-message inter-node latency (NCCL
+# LL/Simple protocol floor over IB), ~45 GB/s busbw per 400G rail at
+# bandwidth saturation; intra-node NVSwitch ~ 3 us kernel/proxy latency and
+# ~370 GB/s per-GPU NVLink bandwidth, with the switch fabric sustaining all
+# 8 GPUs concurrently (aggregate ~ 2.9 TB/s).  Element size 4 (fp32 grads).
+NVLINK_IB = Machine(
+    topo=Topology(num_nodes=16, procs_per_node=8, k_lanes=4),
+    cost=CostParams(
+        alpha_intra=3.0,  # NVLink/NVSwitch path latency, us
+        beta_intra=1.1e-5,  # us/elem at ~370 GB/s, fp32
+        alpha_inter=5.0,  # IB + NCCL proxy latency, us
+        beta_inter=8.9e-5,  # us/elem at ~45 GB/s per rail, fp32
+        node_bw_elems=7.2e5,  # NVSwitch aggregate ~2.9 TB/s, elems/us
+        elem_bytes=4,
+    ),
+)
+
+
+def nvlink_ib_machine(
+    k_rails: int = 4, num_nodes: int = 16, procs_per_node: int = 8
+) -> Machine:
+    """NVLink/IB preset with an overridden rail count — the second machine
+    model for evaluating the optimizer and selector (lanes = IB rails per
+    node, 1..procs_per_node)."""
+    return Machine(
+        topo=Topology(
+            num_nodes=num_nodes,
+            procs_per_node=procs_per_node,
+            k_lanes=min(k_rails, procs_per_node),
+        ),
+        cost=NVLINK_IB.cost,
     )
 
 

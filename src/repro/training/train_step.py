@@ -169,7 +169,22 @@ def make_train_step_pjit(cfg: ModelConfig, mesh: Mesh, opt_cfg: OptConfig):
         is_leaf=lambda x: isinstance(x, P),
     )
 
-    act = make_act_shard(cfg, mesh)
+    # Pinned-jax (0.4.37) miscompilation guard: with gradient accumulation
+    # AND a multi-codebook embed, the dim-0 DP sharding constraint makes
+    # GSPMD produce *wrong forward values* (the loss itself changes, and
+    # grad_norm drifts ~sqrt(n) — e.g. musicgen smoke on a 2x2x2 mesh:
+    # grad_norm 3.67 -> 5.03 at microbatches=2).  Characterized by
+    # bisection: eager and constraint-free pjit agree to 5 digits for any
+    # microbatch count; single-codebook models (yi, gemma) are unaffected;
+    # both the backbone-entry and scan-body constraint sites independently
+    # trigger it, with lax.scan and unrolled accumulation alike — i.e. the
+    # partitioner, not the accumulation math.  Correctness beats the
+    # constraint's perf intent, so drop the hook for exactly the affected
+    # configs (musicgen ships parallel.microbatches=8).
+    if cfg.num_codebooks > 1 and max(cfg.parallel.microbatches, 1) > 1:
+        act = None
+    else:
+        act = make_act_shard(cfg, mesh)
 
     def step(params, opt_state, batch):
         grads, metrics = _grad_and_metrics(cfg, params, batch, act_shard=act)

@@ -46,11 +46,15 @@ def test_array_native_generators_match_legacy(topo, op_alg):
     ever building Msg objects."""
     machine = Machine(topo=topo, cost=M.cost)
     k = min(2, topo.procs_per_node)
-    legacy = IR.compile_schedule(S.ALGORITHMS[op_alg](topo, k, 37))
+    legacy = IR.compile_schedule(S.ALGORITHMS[op_alg](topo, k, 37), with_blocks=True)
     native = IR.IR_GENERATORS[op_alg](topo, k, 37)
     assert native.num_rounds == legacy.num_rounds
     assert native.num_msgs == legacy.num_msgs
     assert native.total_elems() == legacy.total_elems()
+    # analytic block CSR == legacy Msg.blocks flattening, bit for bit
+    assert native.has_blocks and legacy.has_blocks
+    np.testing.assert_array_equal(native.blk_ptr, legacy.blk_ptr)
+    np.testing.assert_array_equal(native.blk_ids, legacy.blk_ids)
     # per-round message multisets match exactly
     for r in range(native.num_rounds):
         a = slice(native.round_ptr[r], native.round_ptr[r + 1])

@@ -19,7 +19,10 @@ def test_selector_crossover_broadcast():
 
 def test_selector_alltoall_small_prefers_combining():
     ch = select("alltoall", 1 << 4, num_nodes=2, procs_per_node=256, k_lanes=8)
-    assert ch.algorithm in ("bruck", "fulllane")
+    # round-count-frugal families win the latency regime; the schedule
+    # optimizer's compacted variants (opt:) may flip ahead of their bases
+    family = ch.algorithm.removeprefix("opt:")
+    assert family in ("bruck", "fulllane")
 
 
 def test_selector_candidates_ranked():

@@ -78,9 +78,16 @@ def test_loss_decreases(mesh):
     assert losses[-1] < losses[0] - 0.3, losses
 
 
-def test_microbatch_equivalence(mesh):
-    """micro=1 and micro=2 produce (nearly) the same first step."""
-    base = get_smoke_config("musicgen_large")
+@pytest.mark.parametrize("arch", ["gemma_7b", "musicgen_large"])
+def test_microbatch_equivalence(mesh, arch):
+    """micro=1 and micro=2 produce (nearly) the same first step.
+
+    musicgen (multi-codebook) exercises the pinned-jax GSPMD guard in
+    make_train_step_pjit: with the activation-sharding hook active, jax
+    0.4.37 miscompiles the constrained microbatch forward (wrong loss,
+    grad_norm off by ~sqrt(n)); the factory drops the hook for that
+    config combination, restoring micro=1/micro=2 agreement."""
+    base = get_smoke_config(arch)
     batch = _batch(base)
     outs = {}
     for n in (1, 2):

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# One-command verify recipe (ISSUE 2 CI satellite).
+#
+# Default (fast) mode — gated to finish in under 2 minutes:
+#   * the schedule/IR/optimizer/oracle/simulator test files (the paper-
+#     reproduction core, no jax compilation in the loop), and
+#   * a paper-tables benchmark smoke with the optimizer delta table,
+#     writing BENCH_schedules.json (the cross-PR perf trajectory).
+#
+# CHECK_FULL=1 tools/check.sh additionally runs the whole tier-1 suite
+# (ROADMAP: PYTHONPATH=src python -m pytest -x -q), ~4-5 min with the jax
+# training/model tests.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${CHECK_FULL:-0}" == "1" ]]; then
+    python -m pytest -x -q
+else
+    timeout 100 python -m pytest -x -q \
+        tests/test_schedules.py \
+        tests/test_schedule_ir.py \
+        tests/test_simulator.py \
+        tests/test_passes.py \
+        tests/test_validate.py
+fi
+
+timeout 120 python -m benchmarks.run --only paper --json BENCH_schedules.json \
+    | tail -n 15
+echo "check.sh: OK"
