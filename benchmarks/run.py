@@ -6,10 +6,13 @@ Prints ``name,impl,k,c,sim_us,paper_us`` CSV rows (and roofline rows from
 the dry-run artifacts when present); the paper section ends with the
 ``# optimizer:`` optimized-vs-paper delta lines.  ``--json FILE``
 additionally writes every simulator cell as machine-readable
-``{table, impl, k, c, sim_us, wall_s}`` records — OPT cells carry
-``{base_us, rounds_before, rounds_after, passes}``, the schedule
-optimizer's trajectory — so the perf story is tracked across PRs
-(``BENCH_schedules.json`` by convention).
+``{table, impl, k, c, sim_us, wall_s}`` records — OPT cells (adjacent
+compaction, PR 2) and OPT2 cells (reordering + payload splitting, ISSUE 3)
+carry ``{base_us, rounds_before, rounds_after, ported, passes}``, the
+schedule optimizer's trajectory — so the perf story is tracked across PRs
+(``BENCH_schedules.json`` by convention).  ``tools/bench_gate.py``
+compares a fresh ``--json`` dump against the committed baseline and fails
+CI on any >5% ``sim_us`` regression or disappeared cell.
 
   PYTHONPATH=src python -m benchmarks.run [--skip-hlo] \
       [--only paper|tpu|hlo|roofline] [--json BENCH_schedules.json]
@@ -75,9 +78,11 @@ def main() -> None:
         print(f"# no simulator cells in this selection; {args.json} not written",
               flush=True)
     elif args.json:
-        # OPT cells additionally carry the optimizer trajectory: the
-        # unoptimized baseline, the round delta, and the per-pass records.
-        opt_keys = ("base_us", "rounds_before", "rounds_after", "passes")
+        # OPT/OPT2 cells additionally carry the optimizer trajectory: the
+        # unoptimized baseline, the round delta, the port model the cell
+        # was timed under, and the per-pass records.
+        opt_keys = ("base_us", "rounds_before", "rounds_after", "ported",
+                    "passes")
         payload = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "cells": [

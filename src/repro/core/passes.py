@@ -14,31 +14,68 @@ simulation:
     generate -> compile (schedule_ir) -> optimize (this module)
              -> validate (core.validate) -> simulate (core.simulate)
 
+Pipeline (ISSUE 3 update)
+-------------------------
+The optimizer sits between compilation and validation; within it, a
+:class:`PassManager` fixpoint-iterates a pass pipeline, timing each rewrite
+under the machine model and oracle-checking everything it keeps::
+
+    compiled IR ──▶ PassManager ──ReorderRounds──▶ earliest-fit repack
+                        │  ▲      ──SplitPayloads─▶ k-lane payload split
+                        │  └──────CoalesceMessages/CompactRounds─ fixpoint
+                        ▼
+        objective: (time, rounds, msgs) lexicographic, keep-if-better
+                        │
+                        ▼
+        validate.validate_schedule (every kept rewrite machine-checked)
+                        │
+                        ▼
+                 simulate / BENCH_schedules.json trajectory (per-pass deltas)
+
 Passes
 ------
-* :class:`CompactRounds` — **lane-aware round compaction**: greedily merge
-  adjacent rounds while (a) no processor exceeds the port budget (``limit=1``
-  keeps the schedule strictly lane-legal; ``limit=k`` targets the k lanes a
-  node can drive — the merged schedule posts up to k concurrent non-blocking
-  sends per processor, the paper's own "more non-blocking operations is
-  beneficial" observation) and (b) no message depends on a block acquired
-  in the same merged round (the no-intra-round-forwarding rule, checked on
-  the IR's block arrays).  Compaction is provably never slower under the
-  simulator's cost model: every per-round term is subadditive under round
-  union, so the merged round costs at most the sum of its parts and saves
-  the per-round alphas.
+* :class:`ReorderRounds` — **non-adjacent round reordering**: a greedy list
+  scheduler over the block-dependency DAG (edges exported by
+  :func:`repro.core.validate.block_dependencies`).  Each round, in order,
+  is packed into the *earliest* existing round group that (a) keeps every
+  processor within the port budget, (b) lies strictly after every group
+  that delivers a block the round forwards, and (c) does not mix on-node
+  and off-node traffic at any single processor (mixing would re-price a
+  processor's intra-node bytes at network alpha/beta, the one way a merge
+  could cost time).  Under (a)–(c) every per-round cost term is subadditive
+  under round union, so reordering — like compaction — is provably never
+  slower, while reaching merges adjacency-restricted compaction cannot
+  (e.g. interleaving the k-lane alltoall's trailing on-node phase, or
+  packing a tree algorithm's disjoint waves).
+* :class:`CompactRounds` — lane-aware *adjacent* round compaction (PR 2);
+  kept as the cheap payload-independent mode the selector's affine fits
+  can rely on.  ``limit=1`` stays strictly lane-legal, ``limit=k`` targets
+  the k concurrent non-blocking sends a node's lanes can drive.
+* :class:`SplitPayloads` — **k-lane payload splitting** (the decomposition
+  trick of Träff's arXiv:1910.13373): a large message's ``elems`` and
+  ``blk_ids`` are split across the node's k lanes into parallel same-round
+  messages via :func:`repro.core.schedule_ir.split_messages`; the inverse
+  :func:`~repro.core.schedule_ir.merge_messages` restores the original, so
+  the oracle sees bit-identical block delivery either way.  Splitting is
+  never slower in either port model *provided* ``parts`` does not exceed
+  the machine's lane count (oversplitting past k costs serial alpha
+  batches in the ported model), and strictly faster in the k-ported model
+  whenever a processor posts fewer messages than it has ports — so the
+  ``"split"`` OPT mode derives ``parts`` from the topology rather than
+  trusting a generator's port parameter.
 * :class:`CoalesceMessages` — fuse same-``(src, dst)`` messages within a
-  round into one message (summed elems, concatenated blocks).  This trades
-  per-message overhead against the lane model's stream count — fewer
-  streams can mean fewer active lanes — so it is *not* monotone; run it
-  under ``policy="improved"`` to keep it only when it helps.
+  round (summed elems, concatenated blocks); not monotone (stream count
+  feeds the lane bandwidth term), so run it under an evaluating policy.
 
 :class:`PassManager` composes passes, records per-pass round/message/time
 deltas (the optimizer trajectory surfaced by ``benchmarks.run --json``),
-reverts non-improving passes under ``policy="improved"``, and — because an
-optimizer that silently corrupts a schedule is worse than no optimizer —
-can machine-check every rewrite with the array-native validity oracle
-(:func:`repro.core.validate.validate_schedule`).
+reverts non-improving passes under ``policy="improved"`` (time only) or
+``policy="lex"`` (time, then rounds, then message count — strict
+lexicographic improvement), optionally ``fixpoint``-iterates the pipeline
+until no pass applies, and — because an optimizer that silently corrupts a
+schedule is worse than no optimizer — machine-checks every rewrite with the
+array-native validity oracle: ``validate=True`` raises on a broken rewrite,
+``check=True`` reverts it and records the failure instead.
 """
 
 from __future__ import annotations
@@ -49,13 +86,24 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.schedule_ir import CompiledSchedule
+from repro.core.schedule_ir import (
+    CompiledSchedule,
+    gather_block_csr,
+    merge_messages,
+    split_messages,
+)
 from repro.core.simulate import simulate
-from repro.core.topology import Machine
-from repro.core.validate import initial_holds, validate_schedule
+from repro.core.topology import Machine, Topology
+from repro.core.validate import (
+    block_dependencies,
+    initial_holds,
+    validate_schedule,
+)
 
 __all__ = [
+    "ReorderRounds",
     "CompactRounds",
+    "SplitPayloads",
     "CoalesceMessages",
     "PassRecord",
     "PassManager",
@@ -68,6 +116,176 @@ __all__ = [
 # Passes.  A pass is any object with .name and .apply(cs) -> CompiledSchedule
 # (pure: the input schedule is never mutated).
 # ---------------------------------------------------------------------------
+
+
+class ReorderRounds:
+    """Non-adjacent round reordering: greedy earliest-fit list scheduling.
+
+    Treats the compiled IR as a block-dependency DAG (edges from the
+    validity oracle's block-hop events, :func:`block_dependencies`) and
+    re-packs every round into the earliest *round group* that fits,
+    regardless of source-round adjacency.  A round fits a group iff
+
+    * **port budget** — no processor exceeds ``limit`` concurrent sends or
+      receives in the group (``limit=None`` resolves to the schedule's own
+      ``k``: a node's k lanes are saturated by k concurrent streams);
+    * **causality** — the group lies strictly after the group of every
+      message that delivers a block this round forwards (the oracle's
+      strict-acquisition rule, so reordering can never create intra-round
+      forwarding); and
+    * **class purity** — no processor ends up with both on-node and
+      off-node traffic in one group.  The simulator prices *all* of a
+      processor's round traffic at network alpha/beta once any of it is
+      off-node, so mixing is the single way a merge could re-price bytes
+      upward; banning it makes every per-round cost term subadditive under
+      round union and the pass provably never slower.
+
+    ``procs_per_node`` is required for the class test (the IR itself does
+    not know the node partitioning).  Requires block metadata.
+    """
+
+    def __init__(self, limit: int | None = None, *, procs_per_node: int):
+        self.limit = limit
+        self.procs_per_node = procs_per_node
+        self.name = (
+            f"reorder_rounds[limit={'k' if limit is None else limit},"
+            f"n={procs_per_node}]"
+        )
+
+    def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        if not cs.has_blocks:
+            raise ValueError(
+                "ReorderRounds needs block metadata to honour the "
+                "dependency DAG; generate the schedule with blocks"
+            )
+        n = self.procs_per_node
+        p, R, M = cs.p, cs.num_rounds, cs.num_msgs
+        if p % n:
+            raise ValueError(f"p={p} not divisible by procs_per_node={n}")
+        if R <= 1 or M == 0:
+            return cs
+        limit = max(self.limit if self.limit is not None else cs.k, 1)
+        rid = cs.round_ids()
+
+        # --- per-round provider rounds (from the block-dependency DAG) ----
+        dep_ptr, dep_ids = block_dependencies(cs)
+        req_round = np.repeat(rid, np.diff(dep_ptr))
+        prov_round = rid[dep_ids]
+        fwd = prov_round < req_round  # invalid same/later-round deps are
+        # ignored here; the post-pass oracle check reports them instead
+        order = np.argsort(req_round[fwd], kind="stable")
+        prov_sorted = prov_round[fwd][order]
+        prov_ptr = np.zeros(R + 1, dtype=np.int64)
+        np.cumsum(np.bincount(req_round[fwd], minlength=R), out=prov_ptr[1:])
+
+        # --- group state (at most R groups) -------------------------------
+        send_cnt = np.zeros((R, p), dtype=np.int32)
+        recv_cnt = np.zeros((R, p), dtype=np.int32)
+        send_cls = np.zeros((R, p), dtype=np.uint8)  # 1=intra, 2=inter, 3=mix
+        recv_cls = np.zeros((R, p), dtype=np.uint8)
+        g_max_send = np.zeros(R, dtype=np.int64)
+        g_max_recv = np.zeros(R, dtype=np.int64)
+        g_send_union = np.zeros(R, dtype=np.uint8)
+        g_recv_union = np.zeros(R, dtype=np.uint8)
+        num_groups = 0
+        group_of_round = np.full(R, -1, dtype=np.int64)
+
+        def _cls_of(procs, inter):
+            return (
+                (np.bincount(procs[inter], minlength=p) > 0).astype(np.uint8)
+                << 1
+            ) | (np.bincount(procs[~inter], minlength=p) > 0).astype(np.uint8)
+
+        def _cls_ok(gcls, ccls):
+            # per-proc rule: empty on either side, or identical class
+            return not bool(np.any((gcls != 0) & (ccls != 0) & (gcls != ccls)))
+
+        for r in range(R):
+            a, b = int(cs.round_ptr[r]), int(cs.round_ptr[r + 1])
+            if a == b:
+                continue  # empty round: contributes nothing, drop it
+            srcs, dsts = cs.src[a:b], cs.dst[a:b]
+            s_bc = np.bincount(srcs, minlength=p)
+            r_bc = np.bincount(dsts, minlength=p)
+            inter = (srcs // n) != (dsts // n)
+            scls = _cls_of(srcs, inter)
+            rcls = _cls_of(dsts, inter)
+            s_union = int(np.bitwise_or.reduce(scls))
+            r_union = int(np.bitwise_or.reduce(rcls))
+            s_max, r_max = int(s_bc.max()), int(r_bc.max())
+            uniform = bool(s_bc.min() == s_max and r_bc.min() == r_max)
+            ts = tr = None
+            if not uniform:
+                ts, tr = np.flatnonzero(s_bc), np.flatnonzero(r_bc)
+
+            lo, hi = prov_ptr[r], prov_ptr[r + 1]
+            lb = 0
+            if hi > lo:
+                lb = 1 + int(group_of_round[prov_sorted[lo:hi]].max())
+
+            g = lb
+            while g < num_groups:
+                # O(1) capacity pre-check (exact for uniform rounds)
+                if (
+                    g_max_send[g] + s_max <= limit
+                    and g_max_recv[g] + r_max <= limit
+                ):
+                    fits = True
+                elif uniform:
+                    fits = False
+                else:
+                    fits = bool(
+                        (send_cnt[g, ts] + s_bc[ts]).max() <= limit
+                        and (recv_cnt[g, tr] + r_bc[tr]).max() <= limit
+                    )
+                if fits:
+                    gu, ru = int(g_send_union[g]), int(g_recv_union[g])
+                    # scalar fast path: an empty side, or both sides pure
+                    # and equal (union in (1, 2) means every touched proc
+                    # has that single class) — else fall to the per-proc test
+                    s_pure = gu == 0 or (gu == s_union and s_union in (1, 2))
+                    r_pure = ru == 0 or (ru == r_union and r_union in (1, 2))
+                    if not (s_pure and r_pure):
+                        fits = _cls_ok(send_cls[g], scls) and _cls_ok(
+                            recv_cls[g], rcls
+                        )
+                if fits:
+                    break
+                g += 1
+            if g == num_groups:
+                num_groups += 1
+            send_cnt[g] += s_bc
+            recv_cnt[g] += r_bc
+            send_cls[g] |= scls
+            recv_cls[g] |= rcls
+            g_max_send[g] = int(send_cnt[g].max())
+            g_max_recv[g] = int(recv_cnt[g].max())
+            g_send_union[g] |= s_union
+            g_recv_union[g] |= r_union
+            group_of_round[r] = g
+
+        if num_groups == R and bool(
+            (group_of_round == np.arange(R)).all()
+        ):
+            return cs  # nothing moved
+
+        g_of_msg = group_of_round[rid]
+        morder = np.argsort(g_of_msg, kind="stable")
+        new_ptr = np.zeros(num_groups + 1, dtype=np.int64)
+        np.cumsum(
+            np.bincount(g_of_msg, minlength=num_groups), out=new_ptr[1:]
+        )
+        blk_ptr, blk_ids = gather_block_csr(cs.blk_ptr, cs.blk_ids, morder)
+        return dataclasses.replace(
+            cs,
+            src=cs.src[morder],
+            dst=cs.dst[morder],
+            elems=cs.elems[morder],
+            round_ptr=new_ptr,
+            blk_ptr=blk_ptr,
+            blk_ids=blk_ids,
+            _stats={},
+        )
 
 
 class CompactRounds:
@@ -160,65 +378,56 @@ class CompactRounds:
         return dataclasses.replace(cs, round_ptr=new_ptr, _stats={})
 
 
+class SplitPayloads:
+    """Split large messages across the node's k lanes: each message whose
+    sender posts fewer than ``parts`` messages in its round is split into
+    parallel same-round messages (``parts // posted`` of them, clamped to
+    the element count) via :func:`repro.core.schedule_ir.split_messages` —
+    the k-lane decomposition trick.
+
+    Splitting partitions both ``elems`` and ``blk_ids``, so the oracle's
+    block-hop multiset is unchanged and
+    :func:`~repro.core.schedule_ir.merge_messages` is the exact inverse.
+    Cost-wise the pass is never slower *as long as* ``parts`` does not
+    exceed the simulating machine's lane count: extra streams only raise
+    the lane bandwidth divisor (``min(streams, k)``) and, in the k-ported
+    model, the per-processor port divisor — where a processor drives one
+    big message through one of its k ports, splitting cuts its port term
+    toward ``beta * elems / k``.  Past the machine's k, however, the
+    ported model charges ``alpha * ceil(msgs / k)`` serial batches, so an
+    oversplit *pessimizes*.  ``parts=None`` falls back to ``cs.k`` — the
+    generator's port parameter, which may exceed the machine's lanes — so
+    either pass the machine's ``k_lanes`` explicitly (the ``"split"`` OPT
+    mode does) or run under an evaluating policy such as ``"lex"``.
+    """
+
+    def __init__(self, parts: int | None = None):
+        self.parts = parts
+        self.name = f"split_payloads[parts={'k' if parts is None else parts}]"
+
+    def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        parts = max(self.parts if self.parts is not None else cs.k, 1)
+        if parts <= 1 or cs.num_msgs == 0:
+            return cs
+        p = cs.p
+        skey = cs.round_ids() * p + cs.src
+        posted = np.bincount(skey, minlength=cs.num_rounds * p)[skey]
+        factors = np.maximum(parts // posted, 1)
+        return split_messages(cs, factors)
+
+
 class CoalesceMessages:
     """Fuse same-(src, dst) messages within each round: one message with
-    the summed element count and the concatenated (re-sorted) block set.
-    Changes the node stream count, so gate it behind ``policy="improved"``
-    when stream count feeds the lane bandwidth term."""
+    the summed element count and the concatenated (re-sorted) block set
+    (:func:`repro.core.schedule_ir.merge_messages`, the inverse of
+    :class:`SplitPayloads`).  Changes the node stream count, so gate it
+    behind an evaluating policy when stream count feeds the lane bandwidth
+    term."""
 
     name = "coalesce_messages"
 
     def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
-        if cs.num_msgs == 0:
-            return cs
-        p = cs.p
-        rid = cs.round_ids()
-        key = (rid * p + cs.src) * p + cs.dst
-        order = np.argsort(key, kind="stable")
-        sk = key[order]
-        first = np.ones(sk.size, dtype=bool)
-        first[1:] = sk[1:] != sk[:-1]
-        starts = np.flatnonzero(first)
-        if starts.size == cs.num_msgs:
-            return cs  # nothing to fuse
-        new_src = cs.src[order][starts]
-        new_dst = cs.dst[order][starts]
-        new_rid = rid[order][starts]
-        new_elems = np.add.reduceat(cs.elems[order], starts)
-        new_ptr = np.zeros(cs.num_rounds + 1, dtype=np.int64)
-        np.cumsum(
-            np.bincount(new_rid, minlength=cs.num_rounds), out=new_ptr[1:]
-        )
-        blk_ptr = blk_ids = None
-        if cs.has_blocks:
-            nblk = np.diff(cs.blk_ptr)
-            seg_starts = cs.blk_ptr[:-1]
-            # gather block segments in fused-message order
-            g_counts = nblk[order]
-            total = int(g_counts.sum())
-            base = np.repeat(seg_starts[order], g_counts)
-            off = np.arange(total, dtype=np.int64) - np.repeat(
-                np.cumsum(g_counts) - g_counts, g_counts
-            )
-            flat = cs.blk_ids[base + off]
-            fused_counts = np.add.reduceat(g_counts, starts)
-            seg_id = np.repeat(
-                np.arange(fused_counts.size, dtype=np.int64), fused_counts
-            )
-            flat = flat[np.lexsort((flat, seg_id))]  # canonical per message
-            blk_ptr = np.zeros(fused_counts.size + 1, dtype=np.int64)
-            np.cumsum(fused_counts, out=blk_ptr[1:])
-            blk_ids = flat
-        return dataclasses.replace(
-            cs,
-            src=new_src,
-            dst=new_dst,
-            elems=new_elems,
-            round_ptr=new_ptr,
-            blk_ptr=blk_ptr,
-            blk_ids=blk_ids,
-            _stats={},
-        )
+        return merge_messages(cs)
 
 
 # ---------------------------------------------------------------------------
@@ -229,7 +438,9 @@ class CoalesceMessages:
 @dataclasses.dataclass(frozen=True)
 class PassRecord:
     """Per-pass delta, the optimizer-trajectory unit surfaced in
-    BENCH_schedules.json."""
+    BENCH_schedules.json.  ``oracle_ok`` is None when the pass was not
+    oracle-checked (no ``validate``/``check``, or it returned its input
+    unchanged); ``iteration`` is the fixpoint sweep the record belongs to."""
 
     name: str
     applied: bool
@@ -240,6 +451,8 @@ class PassRecord:
     time_before_us: float | None
     time_after_us: float | None
     wall_s: float
+    oracle_ok: bool | None = None
+    iteration: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -248,11 +461,26 @@ class PassRecord:
 class PassManager:
     """Compose rewrite passes with delta accounting and optional reverts.
 
-    ``policy="always"`` keeps every pass result; ``policy="improved"``
-    (requires ``machine``) re-simulates after each pass and reverts it when
-    strictly slower.  ``validate=True`` runs the validity oracle after
-    every kept pass and raises if a rewrite broke data-flow — optimized
-    schedules are machine-checked, never trusted.
+    Policies decide whether a pass result replaces the current schedule:
+
+    * ``"always"`` — keep every rewrite;
+    * ``"improved"`` — keep when the re-simulated time does not increase
+      (requires ``machine``);
+    * ``"lex"`` — keep on strict lexicographic improvement of
+      ``(time, rounds, msgs)`` with a relative time tolerance (requires
+      ``machine``): faster wins, equal-time-fewer-rounds wins, and a
+      payload split that buys nothing is rejected rather than kept.
+
+    ``fixpoint=True`` re-runs the whole pipeline until a sweep applies no
+    pass (bounded by ``max_iters``), so e.g. a reorder that only becomes
+    legal after a split still lands.
+
+    Oracle integration: ``validate=True`` checks every structurally-new
+    rewrite with :func:`repro.core.validate.validate_schedule` and *raises*
+    on corruption; ``check=True`` instead *reverts* the broken pass and
+    records ``oracle_ok=False`` — the pipeline degrades to a no-op instead
+    of shipping a corrupt schedule.  Optimized schedules are machine-
+    checked, never trusted.
     """
 
     def __init__(
@@ -263,58 +491,126 @@ class PassManager:
         ported: bool = False,
         policy: str = "always",
         validate: bool = False,
+        check: bool = False,
+        fixpoint: bool = False,
+        max_iters: int = 4,
     ):
-        if policy not in ("always", "improved"):
+        if policy not in ("always", "improved", "lex"):
             raise ValueError(f"unknown policy {policy!r}")
-        if policy == "improved" and machine is None:
-            raise ValueError('policy="improved" needs a machine to time on')
+        if policy in ("improved", "lex") and machine is None:
+            raise ValueError(f'policy="{policy}" needs a machine to time on')
         self.passes = list(passes)
         self.machine = machine
         self.ported = ported
         self.policy = policy
         self.validate = validate
+        self.check = check
+        self.fixpoint = fixpoint
+        self.max_iters = max(int(max_iters), 1)
 
     def _time(self, cs: CompiledSchedule) -> float | None:
         if self.machine is None:
             return None
         return simulate(cs, self.machine, ported=self.ported).time_us
 
+    @staticmethod
+    def _lex_better(t_new, new: CompiledSchedule, t_cur, cur) -> bool:
+        tol = 1e-9 * max(1.0, abs(t_cur))
+        if t_new < t_cur - tol:
+            return True
+        if t_new > t_cur + tol:
+            return False
+        if new.num_rounds != cur.num_rounds:
+            return new.num_rounds < cur.num_rounds
+        return new.num_msgs < cur.num_msgs
+
     def run(
         self, cs: CompiledSchedule
     ) -> tuple[CompiledSchedule, list[PassRecord]]:
         records: list[PassRecord] = []
         t_cur = self._time(cs)
-        for ps in self.passes:
-            t0 = time.perf_counter()
-            new = ps.apply(cs)
-            t_new = self._time(new)
-            keep = self.policy == "always" or t_new <= t_cur
-            if keep and self.validate and new is not cs:
-                validate_schedule(new, raise_on_error=True)
-            records.append(
-                PassRecord(
-                    name=getattr(ps, "name", type(ps).__name__),
-                    applied=keep,
-                    rounds_before=cs.num_rounds,
-                    rounds_after=new.num_rounds,
-                    msgs_before=cs.num_msgs,
-                    msgs_after=new.num_msgs,
-                    time_before_us=t_cur,
-                    time_after_us=t_new,
-                    wall_s=time.perf_counter() - t0,
+        sweeps = self.max_iters if self.fixpoint else 1
+        for it in range(sweeps):
+            progressed = False
+            for ps in self.passes:
+                t0 = time.perf_counter()
+                new = ps.apply(cs)
+                changed = new is not cs
+                ok = None
+                if changed and (self.validate or self.check):
+                    report = validate_schedule(new)
+                    ok = report.ok
+                    if not ok and not self.check:
+                        report.raise_if_invalid()
+                if ok is False:
+                    t_new = None  # corrupt rewrite: never timed
+                elif not changed:
+                    t_new = t_cur  # identity result: skip the re-simulation
+                else:
+                    t_new = self._time(new)
+                if ok is False:
+                    keep = False
+                elif self.policy == "always":
+                    keep = True
+                elif self.policy == "improved":
+                    keep = t_new <= t_cur
+                else:  # lex
+                    keep = self._lex_better(t_new, new, t_cur, cs)
+                records.append(
+                    PassRecord(
+                        name=getattr(ps, "name", type(ps).__name__),
+                        applied=keep,
+                        rounds_before=cs.num_rounds,
+                        rounds_after=new.num_rounds,
+                        msgs_before=cs.num_msgs,
+                        msgs_after=new.num_msgs,
+                        time_before_us=t_cur,
+                        time_after_us=t_new,
+                        wall_s=time.perf_counter() - t0,
+                        oracle_ok=ok,
+                        iteration=it,
+                    )
                 )
-            )
-            if keep:
-                cs, t_cur = new, t_new
+                if keep:
+                    progressed = progressed or changed
+                    cs, t_cur = new, t_new
+            if not progressed:
+                break
         return cs, records
 
 
-#: optimize= knob values -> pass pipeline factory (compaction only: its
-#: merge decisions are payload-independent, which keeps the selector's
-#: affine A + B*c interpolation exact for opt: candidates).
-OPT_MODES: dict[str, Callable[[], list]] = {
-    "lane": lambda: [CompactRounds(limit=1)],
-    "ported": lambda: [CompactRounds(limit=None)],
+def _reorder_pipeline(topo: Topology | None) -> list:
+    if topo is None:
+        raise ValueError(
+            'optimize mode "reorder" needs a topology (the class-purity '
+            "test requires procs_per_node); pass topo= or machine="
+        )
+    return [ReorderRounds(limit=None, procs_per_node=topo.procs_per_node)]
+
+
+def _split_pipeline(topo: Topology | None) -> list:
+    if topo is None:
+        raise ValueError(
+            'optimize mode "split" needs a topology (parts must come from '
+            "the machine's lane count, not a generator's port parameter); "
+            "pass topo= or machine="
+        )
+    return [SplitPayloads(parts=topo.k_lanes)]
+
+
+#: optimize= knob values -> pass pipeline factory (called with the target
+#: Topology, or None when the caller has none).  "lane"/"ported" are the
+#: PR 2 adjacent compactions; "reorder" is the non-adjacent list scheduler
+#: (never slower by construction, so it is safe under policy="always" —
+#: the selector races opt: candidates built from it); "split" is the
+#: k-lane payload decomposition at the *topology's* lane count (neutral in
+#: the 1-ported model, a win in the k-ported one; clamping parts to the
+#: machine's lanes is what keeps it never-slower there too).
+OPT_MODES: dict[str, Callable[[Topology | None], list]] = {
+    "lane": lambda topo: [CompactRounds(limit=1)],
+    "ported": lambda topo: [CompactRounds(limit=None)],
+    "reorder": _reorder_pipeline,
+    "split": _split_pipeline,
 }
 
 
@@ -322,16 +618,21 @@ def optimize_schedule(
     cs: CompiledSchedule,
     mode: str = "ported",
     *,
+    topo: Topology | None = None,
     machine: Machine | None = None,
     validate: bool = True,
 ) -> tuple[CompiledSchedule, list[PassRecord]]:
     """One-call optimizer entry: run the ``mode`` pipeline, oracle-check the
-    result, return ``(optimized, records)``."""
+    result, return ``(optimized, records)``.  ``topo`` (or ``machine``,
+    from which it is taken) supplies the node partitioning to the passes
+    that need one."""
     try:
-        pipeline = OPT_MODES[mode]()
+        factory = OPT_MODES[mode]
     except KeyError:
         raise ValueError(
             f"unknown optimize mode {mode!r}; expected one of {sorted(OPT_MODES)}"
         ) from None
-    pm = PassManager(pipeline, machine=machine, validate=validate)
+    if topo is None and machine is not None:
+        topo = machine.topo
+    pm = PassManager(factory(topo), machine=machine, validate=validate)
     return pm.run(cs)

@@ -79,6 +79,9 @@ __all__ = [
     "CompiledSchedule",
     "RoundStats",
     "compile_schedule",
+    "gather_block_csr",
+    "split_messages",
+    "merge_messages",
     "kported_alltoall_ir",
     "bruck_alltoall_ir",
     "klane_alltoall_ir",
@@ -306,6 +309,137 @@ def compile_schedule(
         round_ptr=round_ptr,
         blk_ptr=blk_ptr,
         blk_ids=blk_ids,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Message split / merge primitives (array surgery on the CSR block arrays).
+# These are the payload-rewrite building blocks of the optimizer passes:
+# ``SplitPayloads`` splits via :func:`split_messages`, ``CoalesceMessages``
+# fuses via :func:`merge_messages`, and the two are (multiset-)inverses, so
+# the validity oracle sees bit-identical block delivery either way.
+# ---------------------------------------------------------------------------
+
+
+def gather_block_csr(
+    blk_ptr: np.ndarray, blk_ids: np.ndarray, order: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reorder a CSR block array by a message permutation ``order``:
+    returns ``(new_blk_ptr, new_blk_ids)`` with message ``i``'s blocks taken
+    from old message ``order[i]``, slices concatenated in the new order."""
+    nblk = np.diff(blk_ptr)
+    g_counts = nblk[order]
+    total = int(g_counts.sum())
+    base = np.repeat(blk_ptr[:-1][order], g_counts)
+    off = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(g_counts) - g_counts, g_counts
+    )
+    new_ptr = np.zeros(order.size + 1, dtype=np.int64)
+    np.cumsum(g_counts, out=new_ptr[1:])
+    return new_ptr, blk_ids[base + off]
+
+
+def split_messages(
+    cs: CompiledSchedule, factors: np.ndarray
+) -> CompiledSchedule:
+    """Split message ``i`` into ``factors[i]`` parallel same-round parts.
+
+    Each part keeps the original ``(src, dst)`` and lands in the original
+    round, directly after its siblings; ``elems`` is divided as evenly as
+    possible (every part nonempty — factors are clamped to ``elems``) and
+    the message's block slice is *partitioned* contiguously across the
+    parts (parts beyond the block count carry zero blocks).  Because the
+    parts partition both the payload and the block set, the per-round
+    (src, dst, blk) hop multiset — what the validity oracle replays — is
+    exactly that of the input, and :func:`merge_messages` is an inverse up
+    to message order within a round.
+    """
+    factors = np.asarray(factors, dtype=np.int64)
+    if factors.shape != (cs.num_msgs,):
+        raise ValueError(
+            f"factors must have shape ({cs.num_msgs},), got {factors.shape}"
+        )
+    if cs.num_msgs == 0:
+        return cs
+    f = np.clip(factors, 1, np.maximum(cs.elems, 1))
+    if int(f.max()) <= 1:
+        return cs
+    total = int(f.sum())
+    mid = np.repeat(np.arange(cs.num_msgs, dtype=np.int64), f)
+    part = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(f) - f, f)
+    base, rem = cs.elems // f, cs.elems % f
+    new_elems = base[mid] + (part < rem[mid])
+    new_ptr = np.zeros(cs.num_rounds + 1, dtype=np.int64)
+    np.cumsum(
+        np.bincount(cs.round_ids(), weights=f.astype(np.float64),
+                    minlength=cs.num_rounds).astype(np.int64),
+        out=new_ptr[1:],
+    )
+    blk_ptr = blk_ids = None
+    if cs.has_blocks:
+        nblk = np.diff(cs.blk_ptr)
+        bbase, brem = nblk // f, nblk % f
+        part_counts = bbase[mid] + (part < brem[mid])
+        blk_ptr = np.zeros(total + 1, dtype=np.int64)
+        np.cumsum(part_counts, out=blk_ptr[1:])
+        # contiguous in-order partition: the flat block array is unchanged
+        blk_ids = cs.blk_ids
+    return dataclasses.replace(
+        cs,
+        src=cs.src[mid],
+        dst=cs.dst[mid],
+        elems=new_elems,
+        round_ptr=new_ptr,
+        blk_ptr=blk_ptr,
+        blk_ids=blk_ids,
+        _stats={},
+    )
+
+
+def merge_messages(cs: CompiledSchedule) -> CompiledSchedule:
+    """Fuse same-``(round, src, dst)`` messages into one message with the
+    summed element count and the concatenated (canonically re-sorted) block
+    set.  Returns ``cs`` itself when there is nothing to fuse."""
+    if cs.num_msgs == 0:
+        return cs
+    p = cs.p
+    rid = cs.round_ids()
+    key = (rid * p + cs.src) * p + cs.dst
+    order = np.argsort(key, kind="stable")
+    sk = key[order]
+    first = np.ones(sk.size, dtype=bool)
+    first[1:] = sk[1:] != sk[:-1]
+    starts = np.flatnonzero(first)
+    if starts.size == cs.num_msgs:
+        return cs  # nothing to fuse
+    new_src = cs.src[order][starts]
+    new_dst = cs.dst[order][starts]
+    new_rid = rid[order][starts]
+    new_elems = np.add.reduceat(cs.elems[order], starts)
+    new_ptr = np.zeros(cs.num_rounds + 1, dtype=np.int64)
+    np.cumsum(
+        np.bincount(new_rid, minlength=cs.num_rounds), out=new_ptr[1:]
+    )
+    blk_ptr = blk_ids = None
+    if cs.has_blocks:
+        gptr, flat = gather_block_csr(cs.blk_ptr, cs.blk_ids, order)
+        fused_counts = np.add.reduceat(np.diff(gptr), starts)
+        seg_id = np.repeat(
+            np.arange(fused_counts.size, dtype=np.int64), fused_counts
+        )
+        flat = flat[np.lexsort((flat, seg_id))]  # canonical: ascending/msg
+        blk_ptr = np.zeros(fused_counts.size + 1, dtype=np.int64)
+        np.cumsum(fused_counts, out=blk_ptr[1:])
+        blk_ids = flat
+    return dataclasses.replace(
+        cs,
+        src=new_src,
+        dst=new_dst,
+        elems=new_elems,
+        round_ptr=new_ptr,
+        blk_ptr=blk_ptr,
+        blk_ids=blk_ids,
+        _stats={},
     )
 
 
@@ -584,10 +718,15 @@ def compiled_schedule(
 
     ``optimize`` selects an optimizer pipeline from
     :data:`repro.core.passes.OPT_MODES` (``"lane"`` keeps strict
-    lane-legality, ``"ported"`` compacts up to port width k); the optimized
-    schedule is validated by the array-native oracle before it enters the
-    cache.  Compaction decisions are payload-independent, so optimized
-    entries keep the affine-in-``c`` cost property the selector relies on.
+    lane-legality, ``"ported"`` compacts adjacent rounds up to port width k,
+    ``"reorder"`` list-schedules messages into the earliest dependency- and
+    budget-legal round regardless of adjacency, ``"split"`` splits payloads
+    across the k lanes); the optimized schedule is validated by the
+    array-native oracle before it enters the cache.  Packing decisions are
+    payload-independent (they look at message counts and block dependencies
+    only) but split factors clamp to ``elems``, so optimized entries are
+    piecewise-affine in ``c`` — the selector's 3-probe piecewise fits
+    (``selector.piecewise_cost``) handle any regime flip the rewrites cause.
     """
     global _CACHE_HITS, _CACHE_MISSES
     key = (
@@ -612,7 +751,7 @@ def compiled_schedule(
         from repro.core.passes import optimize_schedule
 
         base = compiled_schedule(op, algorithm, topo, k, c, root)
-        cs, _ = optimize_schedule(base, optimize, validate=True)
+        cs, _ = optimize_schedule(base, optimize, topo=topo, validate=True)
     else:
         gen = IR_GENERATORS.get((op, algorithm))
         if gen is not None:

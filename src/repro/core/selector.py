@@ -26,23 +26,37 @@ Hot-path design (the serving/training loop calls this online):
   sweep, so the table costs 2 simulations per algorithm instead of one per
   (algorithm, size) cell, with the endpoint cells exact by construction;
 * every family also enters the race as an ``opt:``-prefixed candidate — the
-  schedule-optimizer rewrite (``core.passes`` round compaction, validated
-  by the ``core.validate`` oracle) — so the table reflects what a tuned
-  library could actually run, not just the paper's verbatim schedules.
-  Compaction decisions are payload-independent, so ``opt:`` candidates keep
-  the affine-in-``c`` property the probe interpolation relies on.
+  schedule-optimizer rewrite (``core.passes`` ``"reorder"`` mode: the
+  non-adjacent ``ReorderRounds`` list scheduler, validated by the
+  ``core.validate`` oracle) — so the table reflects what a tuned library
+  could actually run, not just the paper's verbatim schedules.  The
+  rewrite is never slower than its base by construction, but it *can*
+  change which cost term dominates mid-sweep (packed rounds trade alphas
+  against serialized port bytes), and payload splitting clamps its factors
+  to ``c`` — so ``opt:`` candidates are only *piecewise* affine in ``c``.
+  ``piecewise_cost`` therefore fits **3 probes** (endpoints + geometric
+  midpoint) into two affine segments; families that regime-flip mid-sweep
+  select correctly where a single 2-probe fit would misrank the interior.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
 from repro.core.topology import Machine, Topology, tpu_v5e_machine
 
-__all__ = ["select", "Choice", "crossover_table", "affine_cost"]
+__all__ = [
+    "select",
+    "Choice",
+    "crossover_table",
+    "affine_cost",
+    "piecewise_cost",
+    "piecewise_eval",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,9 +107,12 @@ def _candidate_algs(op: str, topo: Topology) -> list[str]:
 
 
 def _parse_alg(alg: str) -> tuple[str, str | None]:
-    """``"opt:klane"`` -> ``("klane", "ported")``; plain names pass through."""
+    """``"opt:klane"`` -> ``("klane", "reorder")``; plain names pass
+    through.  ``"reorder"`` (non-adjacent earliest-fit packing) supersedes
+    the PR 2 ``"ported"`` adjacent compaction as the opt: pipeline — it
+    merges at least as aggressively and is likewise never slower."""
     if alg.startswith("opt:"):
-        return alg[4:], "ported"
+        return alg[4:], "reorder"
     return alg, None
 
 
@@ -181,6 +198,55 @@ def affine_cost(
     return t_lo - slope * c_lo, slope
 
 
+@functools.lru_cache(maxsize=4096)
+def piecewise_cost(
+    op: str,
+    alg: str,
+    c_lo: int,
+    c_hi: int,
+    num_nodes: int = 2,
+    procs_per_node: int = 256,
+    k_lanes: int = 8,
+) -> tuple[int, float, float, float, float] | None:
+    """3-probe piecewise-affine fit ``(c_mid, A1, B1, A2, B2)``.
+
+    Probes at ``c_lo``, the geometric midpoint, and ``c_hi``; segment 1
+    (``A1 + B1*c``) covers ``c <= c_mid``, segment 2 the rest.  Exact at
+    all three probes, so the two-segment fit catches a family whose
+    dominating cost term flips somewhere inside the sweep — the ``opt:``
+    rewrites and payload splitting do exactly that — where the 2-probe
+    affine fit would silently misprice the whole interior.  Returns None
+    if the family cannot be generated on this mesh.
+    """
+    t_lo = _sim_payload(op, alg, c_lo, num_nodes, procs_per_node, k_lanes)
+    if t_lo is None:
+        return None
+    if c_hi <= c_lo:
+        return c_lo, t_lo, 0.0, t_lo, 0.0
+    c_mid = int(round(math.sqrt(float(c_lo) * float(c_hi))))
+    c_mid = min(max(c_mid, c_lo + 1), c_hi - 1) if c_hi > c_lo + 1 else c_lo
+    t_hi = _sim_payload(op, alg, c_hi, num_nodes, procs_per_node, k_lanes)
+    if t_hi is None:
+        return None
+    if c_mid <= c_lo:  # sweep too narrow for a midpoint: plain affine
+        b = (t_hi - t_lo) / (c_hi - c_lo)
+        return c_lo, t_lo - b * c_lo, b, t_lo - b * c_lo, b
+    t_mid = _sim_payload(op, alg, c_mid, num_nodes, procs_per_node, k_lanes)
+    if t_mid is None:
+        return None
+    b1 = (t_mid - t_lo) / (c_mid - c_lo)
+    b2 = (t_hi - t_mid) / (c_hi - c_mid)
+    return c_mid, t_lo - b1 * c_lo, b1, t_mid - b2 * c_mid, b2
+
+
+def piecewise_eval(
+    fit: tuple[int, float, float, float, float], c: int
+) -> float:
+    """Evaluate a :func:`piecewise_cost` fit at payload ``c``."""
+    c_mid, a1, b1, a2, b2 = fit
+    return a1 + b1 * c if c <= c_mid else a2 + b2 * c
+
+
 def crossover_table(
     op: str,
     sizes=None,
@@ -191,9 +257,12 @@ def crossover_table(
 ) -> list[tuple[int, str, float]]:
     """The size-switched algorithm table for one op — EXPERIMENTS.md exhibit.
 
-    Simulates each candidate algorithm only at the endpoints of the size
-    sweep and ranks interior sizes from the interpolated affine cost; the
-    full table costs 2 simulations per algorithm regardless of sweep length.
+    Simulates each candidate algorithm at only 3 probe payloads (sweep
+    endpoints + geometric midpoint) and ranks interior sizes from the
+    interpolated piecewise-affine cost; the full table costs 3 simulations
+    per algorithm regardless of sweep length, with the endpoint cells exact
+    by construction and regime flips inside the sweep resolved by the
+    second segment.
     """
     if sizes is None:
         sizes = [1 << s for s in range(0, 27, 2)]
@@ -205,14 +274,16 @@ def crossover_table(
     c_lo, c_hi = min(sizes), max(sizes)
     machine = _machine_for(**mesh)
     proxy, _ = _proxy_machine(machine)
-    fits: dict[str, tuple[float, float]] = {}
+    fits: dict[str, tuple[int, float, float, float, float]] = {}
     for alg in _candidate_algs(op, proxy.topo):
-        fit = affine_cost(op, alg, c_lo, c_hi, **mesh)
+        fit = piecewise_cost(op, alg, c_lo, c_hi, **mesh)
         if fit is not None:
             fits[alg] = fit
     out = []
     for s in sizes:
-        ranked = sorted(((a + b * s, alg) for alg, (a, b) in fits.items()))
+        ranked = sorted(
+            (piecewise_eval(fit, s), alg) for alg, fit in fits.items()
+        )
         est, best = ranked[0]
         out.append((s, best, est))
     return out

@@ -33,6 +33,13 @@ alltoall) would never fit.
 
 Postconditions are checked the same way: the op's required final
 (owner, block) pairs must each be analytic or acquired at some round.
+
+Besides the pass/fail oracle this module also *exports* the data-flow
+structure it computes along the way: :func:`block_dependencies` turns the
+block-hop events into a message-level dependency DAG (message -> the
+earliest messages that deliver the blocks it forwards), which is what the
+``ReorderRounds`` list scheduler in :mod:`repro.core.passes` consumes to
+re-pack messages into earlier rounds without breaking causality.
 """
 
 from __future__ import annotations
@@ -43,7 +50,12 @@ import numpy as np
 
 from repro.core.schedule_ir import CompiledSchedule
 
-__all__ = ["ValidationReport", "initial_holds", "validate_schedule"]
+__all__ = [
+    "ValidationReport",
+    "initial_holds",
+    "validate_schedule",
+    "block_dependencies",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +104,86 @@ def _events(cs: CompiledSchedule):
     src = np.repeat(cs.src, nblk)
     dst = np.repeat(cs.dst, nblk)
     return rid, src, dst, cs.blk_ids
+
+
+def block_dependencies(
+    cs: CompiledSchedule,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Message-level block-dependency DAG as a CSR ``(dep_ptr, dep_ids)``.
+
+    Message ``i`` depends on provider messages ``dep_ids[dep_ptr[i]:
+    dep_ptr[i+1]]`` (unique, ascending): for every block ``i`` sends but its
+    source does not hold analytically, the provider is the *earliest*
+    message in the schedule that delivers that ``(src, blk)`` pair.  An edge
+    ``j -> i`` therefore means "any rewrite must schedule message ``j``
+    strictly before message ``i``"; scheduling every message after its
+    providers reproduces exactly the oracle's strict-acquisition rule, so a
+    list scheduler that honours these edges cannot create a causality
+    violation.
+
+    Linking only the earliest provider (rather than every delivery of the
+    block) is sound for earliest-round packing — providers are processed
+    first in original round order — and keeps the graph O(hops).
+
+    Raises ``ValueError`` if the schedule has no block metadata and
+    ``AssertionError`` if some requirement has no provider at all (the
+    schedule is invalid; run :func:`validate_schedule` for forensics).
+    """
+    if not cs.has_blocks:
+        raise ValueError(
+            "schedule carries no block metadata; regenerate with "
+            "compile_schedule(..., with_blocks=True) or an *_ir generator"
+        )
+    M = cs.num_msgs
+    nblk = np.diff(cs.blk_ptr)
+    rid, src, dst, blk = _events(cs)
+    mid = np.repeat(np.arange(M, dtype=np.int64), nblk)
+    if blk.size:
+        bmin = int(blk.min())
+        bspan = int(blk.max()) - bmin + 1
+    else:
+        bmin, bspan = 0, 1
+
+    # earliest delivering message per (dst, blk) key
+    acq_keys = dst * bspan + (blk - bmin)
+    order = np.lexsort((mid, rid, acq_keys))
+    sk = acq_keys[order]
+    first = np.ones(sk.size, dtype=bool)
+    first[1:] = sk[1:] != sk[:-1]
+    uniq_keys = sk[first]
+    provider = mid[order][first]
+
+    # requirements: hops whose source does not hold the block analytically
+    held0 = initial_holds(cs.op, cs.p, src, blk)
+    need = ~held0
+    req_keys = src[need] * bspan + (blk[need] - bmin)
+    req_mid = mid[need]
+    if req_keys.size:
+        if not uniq_keys.size:
+            raise AssertionError(
+                "schedule has block requirements but no acquisitions"
+            )
+        idx = np.minimum(np.searchsorted(uniq_keys, req_keys), uniq_keys.size - 1)
+        if not bool((uniq_keys[idx] == req_keys).all()):
+            raise AssertionError(
+                "unsatisfiable block requirement (no message ever delivers "
+                "it); the schedule is invalid — see validate_schedule"
+            )
+        prov_mid = provider[idx]
+    else:
+        prov_mid = np.empty(0, dtype=np.int64)
+
+    # unique (requirer, provider) edges, CSR over requirer
+    if prov_mid.size:
+        pair = np.unique(req_mid * M + prov_mid)
+        dep_of = pair // M
+        dep_ids = pair % M
+        dep_ptr = np.zeros(M + 1, dtype=np.int64)
+        np.cumsum(np.bincount(dep_of, minlength=M), out=dep_ptr[1:])
+    else:
+        dep_ids = np.empty(0, dtype=np.int64)
+        dep_ptr = np.zeros(M + 1, dtype=np.int64)
+    return dep_ptr, dep_ids
 
 
 def validate_schedule(

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Gate the BENCH_schedules.json perf trajectory (ISSUE 3 CI satellite).
+
+Compares a fresh ``benchmarks.run --json`` dump against the committed
+baseline, cell by cell, keyed by ``(table, impl, k, c)``.  The gate fails
+(exit 1) when
+
+* the fresh file is missing or holds zero cells (``benchmarks.run``
+  produced nothing — a broken table is a failure, not a pass),
+* a baseline cell disappeared from the fresh run, or
+* any cell's ``sim_us`` regressed by more than ``--tol`` (default 5%).
+
+New cells in the fresh run are reported but never fail the gate — adding
+coverage is always allowed.  To bless an intentional change::
+
+    python tools/bench_gate.py BENCH_schedules.fresh.json --update-baseline
+
+which copies the fresh dump over the baseline (commit the result).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def load_cells(path: str) -> dict[tuple, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    cells = payload.get("cells", [])
+    return {(c["table"], c["impl"], c["k"], c["c"]): c for c in cells}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when the fresh BENCH trajectory regresses the "
+        "committed baseline"
+    )
+    ap.add_argument("fresh", help="fresh benchmarks.run --json output")
+    ap.add_argument(
+        "--baseline",
+        default="BENCH_schedules.json",
+        help="committed baseline trajectory (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.05,
+        help="allowed relative sim_us regression per cell (default: 5%%)",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="bless the fresh run as the new baseline and exit 0",
+    )
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.fresh):
+        print(
+            f"bench_gate: FAIL — fresh trajectory {args.fresh!r} does not "
+            "exist (benchmarks.run emitted zero cells?)"
+        )
+        return 1
+    fresh = load_cells(args.fresh)
+    if not fresh:
+        print(f"bench_gate: FAIL — {args.fresh!r} holds zero cells")
+        return 1
+
+    if args.update_baseline:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(
+            f"bench_gate: blessed {args.baseline!r} from {args.fresh!r} "
+            f"({len(fresh)} cells)"
+        )
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"bench_gate: FAIL — no baseline {args.baseline!r}; bless one "
+            "with --update-baseline and commit it"
+        )
+        return 1
+    base = load_cells(args.baseline)
+    if not base:
+        print(f"bench_gate: FAIL — baseline {args.baseline!r} holds zero cells")
+        return 1
+
+    failures: list[str] = []
+    worst_key, worst_rel = None, 0.0
+    for key, bcell in sorted(base.items(), key=lambda kv: repr(kv[0])):
+        fcell = fresh.get(key)
+        if fcell is None:
+            failures.append(f"cell {key} disappeared from the fresh run")
+            continue
+        b_us, f_us = float(bcell["sim_us"]), float(fcell["sim_us"])
+        rel = (f_us - b_us) / b_us if b_us else 0.0
+        if rel > worst_rel:
+            worst_key, worst_rel = key, rel
+        if f_us > b_us * (1.0 + args.tol) + 1e-9:
+            failures.append(
+                f"cell {key}: sim_us {b_us:.3f} -> {f_us:.3f} "
+                f"(+{rel * 100:.1f}% > {args.tol * 100:.1f}% tolerance)"
+            )
+
+    new = sorted(set(fresh) - set(base), key=repr)
+    print(
+        f"bench_gate: {len(base)} baseline cells compared, "
+        f"{len(new)} new cell(s) in fresh run"
+    )
+    if new:
+        for key in new[:10]:
+            print(f"bench_gate:   new cell {key}")
+        if len(new) > 10:
+            print(f"bench_gate:   ... and {len(new) - 10} more")
+    if worst_key is not None:
+        print(
+            f"bench_gate: worst drift {worst_key}: +{worst_rel * 100:.2f}%"
+        )
+    if failures:
+        for line in failures:
+            print(f"bench_gate: FAIL — {line}")
+        print(
+            "bench_gate: intentional? re-bless with "
+            f"`python tools/bench_gate.py {args.fresh} --update-baseline` "
+            "and commit the baseline"
+        )
+        return 1
+    print("bench_gate: OK — trajectory within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
