@@ -18,8 +18,11 @@ compaction + coalescing), with the unoptimized baseline and the per-pass
 trajectory attached for the optimized-vs-paper delta table
 (``render_optimizer_deltas``).  ``table_optimizer_deltas2`` (OPT2) runs
 the ISSUE 3 scheduling-pass suite — non-adjacent round reordering and
-k-lane payload splitting under the fixpoint lexicographic PassManager —
-whose trajectory is what ``tools/bench_gate.py`` gates in CI.
+k-lane payload splitting under the fixpoint lexicographic PassManager.
+``table_optimizer_deltas3`` (OPT3, ISSUE 4) races the conflict-graph
+coloring packer's budget ladder against the first-fit baseline and adds
+the paper-scale (p=1152) broadcast-tree cells; all three trajectories are
+what ``tools/bench_gate.py`` gates in CI.
 
 All cells run on the compiled schedule IR (``repro.core.schedule_ir``):
 the alltoall families are generated array-natively and every schedule is
@@ -34,6 +37,7 @@ import time
 
 from repro.core.passes import (
     CoalesceMessages,
+    ColorRounds,
     CompactRounds,
     PassManager,
     ReorderRounds,
@@ -287,12 +291,89 @@ def table_optimizer_deltas2():
     return rows
 
 
+def table_optimizer_deltas3():
+    """ISSUE 4: the conflict-graph coloring packer at paper scale.  Each
+    cell runs the first-fit ``ReorderRounds`` baseline and cost-aware lane
+    splitting (``SplitPayloads(machine=...)`` — per-message factors priced
+    by the simulator's own alpha/beta formulas), then races the
+    ``ColorRounds`` budget ladder (2k and 4k) against that never-slower
+    baseline under the ``(time, rounds, msgs)`` lexicographic policy, with
+    every kept rewrite oracle-checked.  Splitting runs *before* the
+    coloring rungs on purpose: a colored schedule concentrates sender
+    bytes, so split-then-color reaches strictly better fixpoints on the
+    ported broadcast cells (and the fixpoint sweep retries each pass on
+    the other's output anyway).
+
+    Rows: the headline klane alltoall (36x32, k=2 lanes — the cell PR 3
+    packed to 288 rounds first-fit; the coloring packer must land below
+    260) plus the **broadcast trees at paper scale p=1152** the ROADMAP
+    names as the open reorder-aware OPT coverage: k-ported divide &
+    conquer, adapted k-lane, and full-lane.  Broadcast rows simulate
+    ``ported=True`` (where lane splitting pays); cells where eager
+    coloring loses to first-fit (bandwidth-bound trees concentrate root
+    bytes) record the lex-rejected attempt in ``passes`` — the trajectory
+    shows the race, not just the winner."""
+    n = TOPO.procs_per_node
+    cases = [
+        # (impl, op, alg, gen_k, payloads, ported-sim)
+        ("opt3:klane_a2a", "alltoall", "klane", 32, [1, 869], False),
+        ("opt3:kported_bcast", "broadcast", "kported", 2, [10_000], True),
+        ("opt3:kported_bcast", "broadcast", "kported", 6,
+         [10_000, 1_000_000], True),
+        ("opt3:klane_bcast", "broadcast", "klane", 2,
+         [10_000, 1_000_000], True),
+        ("opt3:fulllane_bcast", "broadcast", "fulllane", 6, [1_000_000], True),
+    ]
+    rows = []
+    for impl, op, alg, gen_k, payloads, ported in cases:
+        for c in payloads:
+            t0 = time.perf_counter()
+            base = compiled_schedule(op, alg, TOPO, gen_k, c)
+            pm = PassManager(
+                [
+                    ReorderRounds(limit=None, procs_per_node=n),
+                    ReorderRounds(limit=2 * base.k, procs_per_node=n),
+                    SplitPayloads(machine=M, ported=ported),
+                    ColorRounds(limit=None, procs_per_node=n, mult=2),
+                    ColorRounds(limit=None, procs_per_node=n, mult=4),
+                    CoalesceMessages(),
+                ],
+                machine=M,
+                ported=ported,
+                policy="lex",
+                validate=True,
+                fixpoint=True,
+                max_iters=2,
+            )
+            opt, records = pm.run(base)
+            base_us = records[0].time_before_us
+            last = records[-1]
+            opt_us = last.time_after_us if last.applied else last.time_before_us
+            rows.append(
+                {
+                    "table": "OPT3",
+                    "impl": impl,
+                    "k": gen_k,
+                    "c": c,
+                    "sim_us": opt_us,
+                    "paper_us": PAPER.get((impl[5:], gen_k, c), ""),
+                    "wall_s": time.perf_counter() - t0,
+                    "base_us": base_us,
+                    "rounds_before": base.num_rounds,
+                    "rounds_after": opt.num_rounds,
+                    "ported": ported,
+                    "passes": [r.as_dict() for r in records],
+                }
+            )
+    return rows
+
+
 def render_optimizer_deltas(rows) -> list[str]:
-    """Human-readable optimized-vs-paper delta lines for the OPT/OPT2
+    """Human-readable optimized-vs-paper delta lines for the OPT/OPT2/OPT3
     cells."""
     out = ["# optimizer: table,impl,c,rounds,opt_rounds,base_us,opt_us,speedup,paper_us"]
     for r in rows:
-        if r.get("table") not in ("OPT", "OPT2"):
+        if r.get("table") not in ("OPT", "OPT2", "OPT3"):
             continue
         speedup = r["base_us"] / r["sim_us"] if r["sim_us"] else float("inf")
         out.append(
@@ -310,4 +391,5 @@ ALL_TABLES = [
     table_alltoall,
     table_optimizer_deltas,
     table_optimizer_deltas2,
+    table_optimizer_deltas3,
 ]

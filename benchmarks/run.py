@@ -32,6 +32,9 @@ def main() -> None:
     ap.add_argument("--skip-hlo", action="store_true")
     ap.add_argument("--json", metavar="FILE", default=None,
                     help="write per-cell {table,impl,k,c,sim_us,wall_s} JSON")
+    ap.add_argument("--deltas", metavar="FILE", default=None,
+                    help="also write the OPT/OPT2/OPT3 optimized-vs-paper "
+                    "delta table to FILE (CI uploads it as an artifact)")
     args = ap.parse_args()
 
     cells: list[dict] = []
@@ -46,8 +49,19 @@ def main() -> None:
             for cell in fn():
                 cells.append(cell)
                 print(csv_row(cell), flush=True)
-        for line in render_optimizer_deltas(cells):
+        delta_lines = render_optimizer_deltas(cells)
+        for line in delta_lines:
             print(line, flush=True)
+        if args.deltas:
+            with open(args.deltas, "w") as f:
+                f.write("\n".join(delta_lines) + "\n")
+            print(f"# wrote optimizer delta table to {args.deltas}",
+                  flush=True)
+    elif args.deltas:
+        # the OPT tables only run in the paper selection; stay loud rather
+        # than silently skipping a requested output file
+        print(f"# optimizer deltas only exist for --only paper; "
+              f"{args.deltas} not written", flush=True)
     if args.only in (None, "tpu"):
         from benchmarks.collective_bench import tpu_projection
         from benchmarks.paper_tables import csv_row

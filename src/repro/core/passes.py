@@ -14,23 +14,32 @@ simulation:
     generate -> compile (schedule_ir) -> optimize (this module)
              -> validate (core.validate) -> simulate (core.simulate)
 
-Pipeline (ISSUE 3 update)
+Pipeline (ISSUE 4 update)
 -------------------------
 The optimizer sits between compilation and validation; within it, a
 :class:`PassManager` fixpoint-iterates a pass pipeline, timing each rewrite
 under the machine model and oracle-checking everything it keeps::
 
     compiled IR ──▶ PassManager ──ReorderRounds──▶ earliest-fit repack
-                        │  ▲      ──SplitPayloads─▶ k-lane payload split
+                        │  ▲      ──ColorRounds───▶ DSATUR conflict coloring
+                        │  │      ──SplitPayloads─▶ cost-aware lane split
                         │  └──────CoalesceMessages/CompactRounds─ fixpoint
                         ▼
         objective: (time, rounds, msgs) lexicographic, keep-if-better
+          (ReorderRounds is the never-slower first-fit baseline the
+           ColorRounds packing must lex-beat to land)
                         │
                         ▼
         validate.validate_schedule (every kept rewrite machine-checked)
                         │
                         ▼
                  simulate / BENCH_schedules.json trajectory (per-pass deltas)
+
+Cost model sharing: the cost-aware passes price rewrites with the
+*simulator's own* per-round port formula
+(:func:`repro.core.simulate.port_time`), so a predicted gain is exactly
+the gain the trajectory will record — there is no second, drifting copy of
+the machine model.
 
 Passes
 ------
@@ -47,6 +56,19 @@ Passes
   slower, while reaching merges adjacency-restricted compaction cannot
   (e.g. interleaving the k-lane alltoall's trailing on-node phase, or
   packing a tree algorithm's disjoint waves).
+* :class:`ColorRounds` — **conflict-graph coloring packer** (ISSUE 4): the
+  message-granularity successor to ``ReorderRounds``.  Messages are the
+  vertices of a conflict graph whose edges are the port budget (two
+  messages sharing a sender or receiver compete for its port), the
+  intra/inter class-purity rule, and the causality partial order exported
+  by :func:`repro.core.validate.block_dependencies`; rounds are the colors.
+  The packer colors greedily in saturation-degree (DSATUR-style) order —
+  most port-contended messages first, the causality order respected by
+  construction — so it can split an original round apart (e.g. pull a
+  broadcast tree's independent waves forward past a blocked sibling),
+  which no round-granularity pass can.  Not provably never-slower (it is
+  not a pure round union), hence raced against the first-fit baseline
+  under ``policy="lex"``.
 * :class:`CompactRounds` — lane-aware *adjacent* round compaction (PR 2);
   kept as the cheap payload-independent mode the selector's affine fits
   can rely on.  ``limit=1`` stays strictly lane-legal, ``limit=k`` targets
@@ -62,7 +84,12 @@ Passes
   batches in the ported model), and strictly faster in the k-ported model
   whenever a processor posts fewer messages than it has ports — so the
   ``"split"`` OPT mode derives ``parts`` from the topology rather than
-  trusting a generator's port parameter.
+  trusting a generator's port parameter.  With ``machine=`` the pass is
+  **cost-aware** (ISSUE 4): per-message split factors come from evaluating
+  the simulator's own alpha/beta formulas per traffic class — splits that
+  the model prices at zero gain (e.g. any split in the 1-ported model when
+  the node's lanes are already stream-saturated) are skipped instead of
+  bloating the message count for the lex policy to reject wholesale.
 * :class:`CoalesceMessages` — fuse same-``(src, dst)`` messages within a
   round (summed elems, concatenated blocks); not monotone (stream count
   feeds the lane bandwidth term), so run it under an evaluating policy.
@@ -90,9 +117,10 @@ from repro.core.schedule_ir import (
     CompiledSchedule,
     gather_block_csr,
     merge_messages,
+    segmented_arange,
     split_messages,
 )
-from repro.core.simulate import simulate
+from repro.core.simulate import port_time, simulate
 from repro.core.topology import Machine, Topology
 from repro.core.validate import (
     block_dependencies,
@@ -102,6 +130,7 @@ from repro.core.validate import (
 
 __all__ = [
     "ReorderRounds",
+    "ColorRounds",
     "CompactRounds",
     "SplitPayloads",
     "CoalesceMessages",
@@ -288,6 +317,223 @@ class ReorderRounds:
         )
 
 
+class ColorRounds:
+    """Conflict-graph coloring round packer: DSATUR-style greedy coloring at
+    **message** granularity (ISSUE 4 tentpole).
+
+    The conflict graph has one vertex per message; rounds are the colors.
+    Two messages conflict — cannot share a color — through
+
+    * **port budget**: more than ``limit`` messages sharing a sender (or a
+      receiver) cannot be concurrent (``limit=None`` resolves to
+      ``mult * cs.k``; the ``mult`` rungs let a lex pipeline race packing
+      depths, since in the alpha-dominated regime deeper packing amortizes
+      more per-round latencies against the same total beta cost);
+    * **class purity**: the per-processor intra/inter mixing ban of
+      :class:`ReorderRounds`, refined to message granularity — mixing
+      re-prices a processor's on-node bytes at network alpha/beta, so an
+      intra message that was intra-priced in the *input* round may never
+      share a color with off-node traffic at either endpoint; an intra
+      message whose input round already carried off-node traffic at that
+      endpoint was already network-priced, so packing it with inter
+      traffic re-prices nothing (this is what lets the packer reproduce —
+      and then beat — input rounds that themselves mix classes, e.g. the
+      k-ported trees' node-boundary waves);
+    * **causality**: the partial order exported by
+      :func:`repro.core.validate.block_dependencies` — a message is colored
+      strictly after every provider of a block it forwards (zero-block
+      split parts inherit their siblings' constraints via the export's
+      lift, so the packer cannot hoist a part ahead of its payload's
+      producer).
+
+    Coloring order is the DSATUR recipe adapted to capacities: the packer
+    fills one color at a time, always extending with the most
+    port-contended ready messages (static saturation proxy: the number of
+    messages competing for either endpoint's port; messages repeatedly
+    displaced by full colors are retried first by construction).  Unlike
+    the round-granularity list scheduler this can split an original round
+    apart — e.g. pull a broadcast tree's root-side sends of *later* waves
+    into the first color, or start a wave's independent subtrees before a
+    sibling subtree unblocks — which is exactly where first-fit leaves
+    rounds on the table.
+
+    The result is not a pure round union of its input, so — unlike
+    ``ReorderRounds``/``CompactRounds`` — it is *not* provably never
+    slower; run it under an evaluating policy (``"lex"``) with the
+    first-fit pass as the baseline, as ``OPT_MODES``/the OPT3 benchmark
+    table do.  Requires block metadata.
+    """
+
+    def __init__(
+        self,
+        limit: int | None = None,
+        *,
+        procs_per_node: int,
+        mult: int = 1,
+    ):
+        self.limit = limit
+        self.mult = mult
+        self.procs_per_node = procs_per_node
+        lim = f"{mult}k" if limit is None else str(limit)
+        self.name = f"color_rounds[limit={lim},n={procs_per_node}]"
+
+    def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        if not cs.has_blocks:
+            raise ValueError(
+                "ColorRounds needs block metadata to honour the "
+                "dependency DAG; generate the schedule with blocks"
+            )
+        n = self.procs_per_node
+        p, R, M = cs.p, cs.num_rounds, cs.num_msgs
+        if p % n:
+            raise ValueError(f"p={p} not divisible by procs_per_node={n}")
+        if R <= 1 or M == 0:
+            return cs
+        limit = max(
+            self.limit if self.limit is not None else self.mult * cs.k, 1
+        )
+
+        # --- causality DAG + transpose (provider -> dependents) -----------
+        dep_ptr, dep_ids = block_dependencies(cs)
+        remaining = np.diff(dep_ptr).astype(np.int64)  # uncolored providers
+        dep_req = np.repeat(np.arange(M, dtype=np.int64), np.diff(dep_ptr))
+        t_ids = dep_req[np.argsort(dep_ids, kind="stable")]
+        t_ptr = np.zeros(M + 1, dtype=np.int64)
+        np.cumsum(np.bincount(dep_ids, minlength=M), out=t_ptr[1:])
+
+        # --- per-side traffic categories for the class-purity test --------
+        # A (=2): off-node; C (=0): on-node, intra-priced in the input
+        # round; B (=1): on-node but the endpoint already had off-node
+        # traffic in its input round, i.e. already network-priced.  Packing
+        # may mix A with B freely; A with C would re-price C's bytes
+        # upward, so it is banned per (processor, side, color).
+        inter = (cs.src // n) != (cs.dst // n)
+        st_in = cs.stats(n)
+        rid_in = cs.round_ids()
+        cat_s = np.where(
+            inter, 2, st_in.send_inter[rid_in, cs.src].astype(np.int8)
+        ).astype(np.int8)
+        cat_r = np.where(
+            inter, 2, st_in.recv_inter[rid_in, cs.dst].astype(np.int8)
+        ).astype(np.int8)
+
+        # --- saturation-degree priority (static proxy) --------------------
+        # conflict degree = messages competing for either endpoint's port;
+        # ties break in generation order, which keeps the phase structure
+        # of regular schedules intact.
+        deg = (
+            np.bincount(cs.src, minlength=p)[cs.src]
+            + np.bincount(cs.dst, minlength=p)[cs.dst]
+        )
+        prank = np.empty(M, dtype=np.int64)
+        prank[np.lexsort((np.arange(M), -deg))] = np.arange(M, dtype=np.int64)
+
+        # per-sender queues in priority order (CSR over src)
+        pool = np.lexsort((prank, cs.src))
+        qptr = np.zeros(p + 1, dtype=np.int64)
+        np.cumsum(np.bincount(cs.src, minlength=p), out=qptr[1:])
+        head = qptr[:-1].copy()
+        qend = qptr[1:]
+
+        color_of = np.full(M, -1, dtype=np.int64)
+        done = np.zeros(M, dtype=bool)
+        uncolored = M
+        g = 0
+        while uncolored:
+            # advance queue heads past messages colored out of order
+            while True:
+                live = head < qend
+                adv = live & done[pool[np.where(live, head, 0)]]
+                if not adv.any():
+                    break
+                head[adv] += 1
+            # candidate window: the next <= limit queue entries per sender
+            # (send capacity holds by construction), dependency-ready only
+            sizes = np.clip(qend - head, 0, limit)
+            take = np.empty(0, dtype=np.int64)
+            if int(sizes.sum()):
+                wmsg = pool[np.repeat(head, sizes) + segmented_arange(sizes)]
+                cand = wmsg[(~done[wmsg]) & (remaining[wmsg] == 0)]
+                if cand.size:
+                    cand = cand[np.argsort(prank[cand], kind="stable")]
+                    csrc, cdst = cs.src[cand], cs.dst[cand]
+                    cas, car = cat_s[cand], cat_r[cand]
+                    # class purity: off-node (A) and intra-priced on-node
+                    # (C) traffic may not share an endpoint in one color;
+                    # the highest-priority candidate at each endpoint
+                    # decides which side survives (reversed scatter leaves
+                    # the first write standing — the global top candidate
+                    # always survives, so every color takes a message)
+                    first_s = np.full(p, -1, dtype=np.int8)
+                    first_r = np.full(p, -1, dtype=np.int8)
+                    first_s[csrc[::-1]] = cas[::-1]
+                    first_r[cdst[::-1]] = car[::-1]
+                    has_a_s = np.zeros(p, dtype=bool)
+                    has_a_r = np.zeros(p, dtype=bool)
+                    has_a_s[csrc[cas == 2]] = True
+                    has_a_r[cdst[car == 2]] = True
+                    drop_c_s = has_a_s & (first_s != 0)
+                    drop_c_r = has_a_r & (first_r != 0)
+                    drop_a_s = first_s == 0
+                    drop_a_r = first_r == 0
+                    pure = ~(
+                        ((cas == 0) & drop_c_s[csrc])
+                        | ((cas == 2) & drop_a_s[csrc])
+                        | ((car == 0) & drop_c_r[cdst])
+                        | ((car == 2) & drop_a_r[cdst])
+                    )
+                    cand, cdst = cand[pure], cdst[pure]
+                if cand.size:
+                    # receive capacity: first `limit` takers per receiver
+                    # in priority order
+                    o2 = np.argsort(cdst, kind="stable")
+                    sd = cdst[o2]
+                    newgrp = np.ones(sd.size, dtype=bool)
+                    newgrp[1:] = sd[1:] != sd[:-1]
+                    gstart = np.maximum.accumulate(
+                        np.where(newgrp, np.arange(sd.size), 0)
+                    )
+                    keep = np.zeros(cand.size, dtype=bool)
+                    keep[o2] = (np.arange(sd.size) - gstart) < limit
+                    take = cand[keep]
+            if not take.size:
+                # every queue head is dependency-blocked but ready work may
+                # hide behind one: take the highest-priority ready message
+                # (rare; keeps the coloring deadlock-free)
+                ready = np.flatnonzero((~done) & (remaining == 0))
+                if not ready.size:
+                    raise AssertionError(
+                        "ColorRounds: unfinished coloring with no ready "
+                        "message — cyclic block dependencies (invalid input)"
+                    )
+                take = ready[[int(np.argmin(prank[ready]))]]
+            done[take] = True
+            color_of[take] = g
+            uncolored -= int(take.size)
+            rep = t_ptr[take + 1] - t_ptr[take]
+            if int(rep.sum()):  # release dependents of just-colored providers
+                hit = np.repeat(t_ptr[take], rep) + segmented_arange(rep)
+                np.subtract.at(remaining, t_ids[hit], 1)
+            g += 1
+
+        if g == R and bool((color_of == cs.round_ids()).all()):
+            return cs  # coloring reproduced the input rounds
+        morder = np.argsort(color_of, kind="stable")
+        new_ptr = np.zeros(g + 1, dtype=np.int64)
+        np.cumsum(np.bincount(color_of, minlength=g), out=new_ptr[1:])
+        blk_ptr, blk_ids = gather_block_csr(cs.blk_ptr, cs.blk_ids, morder)
+        return dataclasses.replace(
+            cs,
+            src=cs.src[morder],
+            dst=cs.dst[morder],
+            elems=cs.elems[morder],
+            round_ptr=new_ptr,
+            blk_ptr=blk_ptr,
+            blk_ids=blk_ids,
+            _stats={},
+        )
+
+
 class CompactRounds:
     """Greedy adjacent-round merging under a port budget + data-flow rule.
 
@@ -399,13 +645,46 @@ class SplitPayloads:
     generator's port parameter, which may exceed the machine's lanes — so
     either pass the machine's ``k_lanes`` explicitly (the ``"split"`` OPT
     mode does) or run under an evaluating policy such as ``"lex"``.
+
+    **Cost-aware mode** (ISSUE 4): with ``machine=`` the pass prices every
+    candidate split with the simulator's own per-sender port formula
+    (:func:`repro.core.simulate.port_time`) and only splits where the
+    alpha/beta trade-off of the message's traffic class predicts a strict
+    gain: the per-sender port term must drop (k-ported model: the sender's
+    bytes spread over more of its k streams without exceeding them).  In
+    the 1-ported model *no* split can pay: the port term serializes a
+    sender's bytes regardless of message count, and whenever a node drives
+    fewer streams than lanes those streams come from at most that many
+    senders, so the worst port term already dominates the node lane term
+    (``beta*max_proc_bytes >= beta*node_bytes/streams``) — splitting only
+    shrinks the smaller term.  The cost-aware pass is therefore an exact
+    identity there, where the uniform mode emits every split as message
+    bloat the lex policy must then reject wholesale.
     """
 
-    def __init__(self, parts: int | None = None):
+    def __init__(
+        self,
+        parts: int | None = None,
+        *,
+        machine: Machine | None = None,
+        ported: bool = False,
+    ):
         self.parts = parts
-        self.name = f"split_payloads[parts={'k' if parts is None else parts}]"
+        self.machine = machine
+        self.ported = ported
+        if machine is not None:
+            self.name = (
+                f"split_payloads[cost,k={machine.topo.k_lanes},"
+                f"{'ported' if ported else '1ported'}]"
+            )
+        else:
+            self.name = (
+                f"split_payloads[parts={'k' if parts is None else parts}]"
+            )
 
     def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        if self.machine is not None:
+            return self._apply_costed(cs)
         parts = max(self.parts if self.parts is not None else cs.k, 1)
         if parts <= 1 or cs.num_msgs == 0:
             return cs
@@ -413,6 +692,36 @@ class SplitPayloads:
         skey = cs.round_ids() * p + cs.src
         posted = np.bincount(skey, minlength=cs.num_rounds * p)[skey]
         factors = np.maximum(parts // posted, 1)
+        return split_messages(cs, factors)
+
+    def _apply_costed(self, cs: CompiledSchedule) -> CompiledSchedule:
+        topo, cost = self.machine.topo, self.machine.cost
+        k, n = topo.k_lanes, topo.procs_per_node
+        p, R = cs.p, cs.num_rounds
+        if k <= 1 or cs.num_msgs == 0 or not self.ported:
+            # 1-ported: the port term serializes a sender's bytes regardless
+            # of message count, and it dominates the node lane term in every
+            # lane-starved round (see the class docstring) — no split pays.
+            return cs
+        if p % n:
+            raise ValueError(f"p={p} not divisible by procs_per_node={n}")
+        rid = cs.round_ids()
+        skey = rid * p + cs.src
+        # per-(round, sender) aggregates: the port term's inputs
+        posted = np.bincount(skey, minlength=R * p)
+        e_tot = np.bincount(
+            skey, weights=cs.elems.astype(np.float64), minlength=R * p
+        )
+        inter = (cs.src // n) != (cs.dst // n)
+        s_inter = np.bincount(skey[inter], minlength=R * p) > 0
+        # lane-filling factor: split each of the sender's messages so its
+        # round posts as close to k streams as possible without exceeding
+        # them (past k the ported model charges serial alpha batches)
+        f_proc = np.maximum(k // np.maximum(posted, 1), 1)
+        # predicted per-sender port gain, priced by the simulator's formula
+        t0 = port_time(cost, e_tot, posted, s_inter, k, ported=True)
+        t1 = port_time(cost, e_tot, posted * f_proc, s_inter, k, ported=True)
+        factors = np.where(((t0 - t1) > 0.0)[skey], f_proc[skey], 1)
         return split_messages(cs, factors)
 
 
@@ -598,19 +907,37 @@ def _split_pipeline(topo: Topology | None) -> list:
     return [SplitPayloads(parts=topo.k_lanes)]
 
 
+def _color_pipeline(topo: Topology | None) -> list:
+    if topo is None:
+        raise ValueError(
+            'optimize mode "color" needs a topology (the class-purity '
+            "test requires procs_per_node); pass topo= or machine="
+        )
+    n = topo.procs_per_node
+    return [ColorRounds(limit=None, procs_per_node=n, mult=4)]
+
+
 #: optimize= knob values -> pass pipeline factory (called with the target
 #: Topology, or None when the caller has none).  "lane"/"ported" are the
-#: PR 2 adjacent compactions; "reorder" is the non-adjacent list scheduler
-#: (never slower by construction, so it is safe under policy="always" —
-#: the selector races opt: candidates built from it); "split" is the
-#: k-lane payload decomposition at the *topology's* lane count (neutral in
-#: the 1-ported model, a win in the k-ported one; clamping parts to the
-#: machine's lanes is what keeps it never-slower there too).
+#: PR 2 adjacent compactions; "reorder" is the non-adjacent first-fit list
+#: scheduler (never slower by construction, so it is safe under
+#: policy="always"); "split" is the k-lane payload decomposition at the
+#: *topology's* lane count (neutral in the 1-ported model, a win in the
+#: k-ported one); "color" is the ISSUE 4 conflict-graph coloring packer at
+#: the 4k budget — the packing-depth sweet spot across the OPT3 cells (in
+#: the alpha-dominated regime deeper packing amortizes more per-round
+#: latencies against the same total beta cost, and 4k stays well below
+#: port over-subscription).  ColorRounds is not provably never-slower, so
+#: the selector *races* opt: candidates built from it against their
+#: unoptimized bases rather than trusting them; the OPT3 benchmark table
+#: additionally runs the full lex ladder ({2k, 4k} budgets against the
+#: first-fit baseline) where every rung is evaluated before it lands.
 OPT_MODES: dict[str, Callable[[Topology | None], list]] = {
     "lane": lambda topo: [CompactRounds(limit=1)],
     "ported": lambda topo: [CompactRounds(limit=None)],
     "reorder": _reorder_pipeline,
     "split": _split_pipeline,
+    "color": _color_pipeline,
 }
 
 

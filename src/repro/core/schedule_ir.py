@@ -79,6 +79,7 @@ __all__ = [
     "CompiledSchedule",
     "RoundStats",
     "compile_schedule",
+    "segmented_arange",
     "gather_block_csr",
     "split_messages",
     "merge_messages",
@@ -321,6 +322,18 @@ def compile_schedule(
 # ---------------------------------------------------------------------------
 
 
+def segmented_arange(counts: np.ndarray) -> np.ndarray:
+    """``concatenate([arange(c) for c in counts])`` without the Python loop:
+    the within-segment offset of every element of a ragged array described
+    by per-segment ``counts``.  The CSR-surgery workhorse shared by the
+    block-gather/split primitives here and the optimizer passes."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    return np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(counts) - counts, counts
+    )
+
+
 def gather_block_csr(
     blk_ptr: np.ndarray, blk_ids: np.ndarray, order: np.ndarray
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -329,11 +342,8 @@ def gather_block_csr(
     from old message ``order[i]``, slices concatenated in the new order."""
     nblk = np.diff(blk_ptr)
     g_counts = nblk[order]
-    total = int(g_counts.sum())
     base = np.repeat(blk_ptr[:-1][order], g_counts)
-    off = np.arange(total, dtype=np.int64) - np.repeat(
-        np.cumsum(g_counts) - g_counts, g_counts
-    )
+    off = segmented_arange(g_counts)
     new_ptr = np.zeros(order.size + 1, dtype=np.int64)
     np.cumsum(g_counts, out=new_ptr[1:])
     return new_ptr, blk_ids[base + off]
@@ -366,7 +376,7 @@ def split_messages(
         return cs
     total = int(f.sum())
     mid = np.repeat(np.arange(cs.num_msgs, dtype=np.int64), f)
-    part = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(f) - f, f)
+    part = segmented_arange(f)
     base, rem = cs.elems // f, cs.elems % f
     new_elems = base[mid] + (part < rem[mid])
     new_ptr = np.zeros(cs.num_rounds + 1, dtype=np.int64)

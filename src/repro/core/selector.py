@@ -26,14 +26,16 @@ Hot-path design (the serving/training loop calls this online):
   sweep, so the table costs 2 simulations per algorithm instead of one per
   (algorithm, size) cell, with the endpoint cells exact by construction;
 * every family also enters the race as an ``opt:``-prefixed candidate — the
-  schedule-optimizer rewrite (``core.passes`` ``"reorder"`` mode: the
-  non-adjacent ``ReorderRounds`` list scheduler, validated by the
-  ``core.validate`` oracle) — so the table reflects what a tuned library
-  could actually run, not just the paper's verbatim schedules.  The
-  rewrite is never slower than its base by construction, but it *can*
-  change which cost term dominates mid-sweep (packed rounds trade alphas
-  against serialized port bytes), and payload splitting clamps its factors
-  to ``c`` — so ``opt:`` candidates are only *piecewise* affine in ``c``.
+  schedule-optimizer rewrite (``core.passes`` ``"color"`` mode: the ISSUE 4
+  conflict-graph coloring packer, validated by the ``core.validate``
+  oracle) — so the table reflects what a tuned library could actually run,
+  not just the paper's verbatim schedules.  The coloring packer is not
+  provably never-slower (unlike the PR 3 first-fit it replaces here), but
+  the base family is always in the same race, so a losing rewrite ranks
+  behind rather than ships; it *can* change which cost term dominates
+  mid-sweep (packed rounds trade alphas against serialized port bytes),
+  and payload splitting clamps its factors to ``c`` — so ``opt:``
+  candidates are only *piecewise* affine in ``c``.
   ``piecewise_cost`` therefore fits **3 probes** (endpoints + geometric
   midpoint) into two affine segments; families that regime-flip mid-sweep
   select correctly where a single 2-probe fit would misrank the interior.
@@ -70,13 +72,21 @@ class Choice:
 def _proxy_machine(machine: Machine, max_n: int = 16) -> tuple[Machine, float]:
     """Shrink the intra-node dimension for fast simulation; payload-per-proc
     scaling keeps the bandwidth terms honest (round counts change only by
-    O(log) which the alpha term absorbs conservatively)."""
+    O(log) which the alpha term absorbs conservatively).
+
+    The proxy must never change the lane count: the old ``min(k_lanes,
+    max_n)`` clamp silently halved (or worse) every k-lane family's node
+    bandwidth whenever ``k_lanes > max_n``, with no compensation in the
+    returned scale (ISSUE 4 satellite).  The intra-node dimension therefore
+    shrinks only down to the lane count — a mesh whose lanes need all its
+    processors is simulated at full size rather than mispriced."""
     topo = machine.topo
-    if topo.procs_per_node <= max_n:
+    proxy_n = max(max_n, topo.k_lanes)
+    if topo.procs_per_node <= proxy_n:
         return machine, 1.0
-    scale = topo.procs_per_node / max_n
+    scale = topo.procs_per_node / proxy_n
     proxy = Machine(
-        topo=Topology(topo.num_nodes, max_n, min(topo.k_lanes, max_n)),
+        topo=Topology(topo.num_nodes, proxy_n, topo.k_lanes),
         cost=machine.cost,
     )
     return proxy, scale
@@ -107,12 +117,15 @@ def _candidate_algs(op: str, topo: Topology) -> list[str]:
 
 
 def _parse_alg(alg: str) -> tuple[str, str | None]:
-    """``"opt:klane"`` -> ``("klane", "reorder")``; plain names pass
-    through.  ``"reorder"`` (non-adjacent earliest-fit packing) supersedes
-    the PR 2 ``"ported"`` adjacent compaction as the opt: pipeline — it
-    merges at least as aggressively and is likewise never slower."""
+    """``"opt:klane"`` -> ``("klane", "color")``; plain names pass through.
+    ``"color"`` (the ISSUE 4 conflict-graph coloring packer) supersedes the
+    PR 3 ``"reorder"`` first-fit as the opt: pipeline.  Unlike reorder it
+    is not provably never slower — but the selector *races* every opt:
+    candidate against its unoptimized base, so a cell where eager coloring
+    loses (bandwidth-bound trees) simply ranks behind the base instead of
+    shipping."""
     if alg.startswith("opt:"):
-        return alg[4:], "reorder"
+        return alg[4:], "color"
     return alg, None
 
 

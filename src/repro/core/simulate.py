@@ -53,7 +53,55 @@ import numpy as np
 from repro.core.schedule import Schedule
 from repro.core.topology import Machine
 
-__all__ = ["simulate", "simulate_msgs", "SimResult"]
+__all__ = ["simulate", "simulate_msgs", "SimResult", "port_time", "lane_time"]
+
+
+# ---------------------------------------------------------------------------
+# Costing hooks: THE per-round cost formulas, shared between the simulator
+# and the cost-aware optimizer passes (ISSUE 4).  ``repro.core.passes``
+# evaluates ``port_time`` to price a rewrite (per-message split factors
+# from the alpha/beta trade-off per traffic class) with exactly the
+# arithmetic the simulator will charge — no second, drifting copy of the
+# model.  ``lane_time`` is exported on the same terms for cost-aware
+# passes that need the node rail term (none does today: the 1-ported
+# lane-starved case is dominated by the port term, see SplitPayloads).
+# Every expression is written operation-for-operation like the per-``Msg``
+# reference so the floats stay bit-exact.
+# ---------------------------------------------------------------------------
+
+
+def port_time(cost, elems, nmsgs, inter, k, *, ported, alpha_batches=True):
+    """Per-processor port completion term for one round (vectorized).
+
+    ``elems``/``nmsgs`` are the processor's total round traffic and message
+    count on one side (send or receive); ``inter`` selects the network
+    alpha/beta whenever any of that traffic is off-node.  In the k-ported
+    model the processor drives ``min(nmsgs, k)`` concurrent streams;
+    ``alpha_batches=True`` (the send side) additionally charges
+    ``alpha * ceil(nmsgs / k)`` serial posting batches.
+    """
+    elems = np.asarray(elems, dtype=np.float64)
+    nmsgs = np.asarray(nmsgs)
+    beta = np.where(inter, cost.beta_inter, cost.beta_intra)
+    alpha = np.where(inter, cost.alpha_inter, cost.alpha_intra)
+    if ported:
+        denom = np.minimum(nmsgs, k)
+        t = alpha + beta * elems / np.where(denom, denom, 1)
+        if alpha_batches:
+            eff = -(-nmsgs // k)  # ceil(nmsgs / k) serial alpha batches
+            t = np.maximum(t, alpha * eff)
+        return t
+    return alpha + beta * elems
+
+
+def lane_time(cost, elems, streams, k):
+    """Per-node lane bandwidth term: ``streams`` concurrent off-node
+    messages share the node's k rails; fewer streams than rails leave
+    bandwidth idle (which is what k-lane payload splitting reclaims)."""
+    elems = np.asarray(elems, dtype=np.float64)
+    return cost.alpha_inter + cost.beta_inter * elems / np.minimum(
+        np.maximum(streams, 1), k
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,34 +143,28 @@ def _simulate_ir(cs, machine: Machine, *, ported: bool) -> SimResult:
     # beta/alpha selection matches the reference: the slower network params
     # apply whenever any of the processor's round traffic is off-node.
     s_mask = st.send_cnt > 0
-    beta_s = np.where(st.send_inter, cost.beta_inter, cost.beta_intra)
-    alpha_s = np.where(st.send_inter, cost.alpha_inter, cost.alpha_intra)
-    if ported:
-        eff = -(-st.send_cnt // k)  # ceil(nmsgs / k) serial alpha batches
-        denom = np.minimum(st.send_cnt, k)
-        t_send = alpha_s + beta_s * st.send_elems / np.where(denom, denom, 1)
-        t_send = np.maximum(t_send, alpha_s * eff)
-    else:
-        t_send = alpha_s + beta_s * st.send_elems
+    t_send = port_time(
+        cost, st.send_elems, st.send_cnt, st.send_inter, k, ported=ported
+    )
     t_send = np.where(s_mask, t_send, 0.0)
 
     r_mask = st.recv_cnt > 0
-    beta_r = np.where(st.recv_inter, cost.beta_inter, cost.beta_intra)
-    alpha_r = np.where(st.recv_inter, cost.alpha_inter, cost.alpha_intra)
-    if ported:
-        denom = np.minimum(st.recv_cnt, k)
-        t_recv = alpha_r + beta_r * st.recv_elems / np.where(denom, denom, 1)
-    else:
-        t_recv = alpha_r + beta_r * st.recv_elems
+    t_recv = port_time(
+        cost,
+        st.recv_elems,
+        st.recv_cnt,
+        st.recv_inter,
+        k,
+        ported=ported,
+        alpha_batches=False,
+    )
     t_recv = np.where(r_mask, t_recv, 0.0)
 
     # --- per-node lane bandwidth terms -------------------------------------
     streams = np.maximum(st.node_out_msgs, st.node_in_msgs)
     n_mask = streams > 0
     max_inflight = int(streams.max()) if streams.size else 0
-    t_node = cost.alpha_inter + cost.beta_inter * np.maximum(
-        st.node_out, st.node_in
-    ) / np.minimum(np.maximum(streams, 1), k)
+    t_node = lane_time(cost, np.maximum(st.node_out, st.node_in), streams, k)
     t_node = np.where(n_mask, t_node, 0.0)
 
     # --- shared-memory aggregate cap ---------------------------------------

@@ -48,7 +48,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.schedule_ir import CompiledSchedule
+from repro.core.schedule_ir import CompiledSchedule, segmented_arange
 
 __all__ = [
     "ValidationReport",
@@ -108,6 +108,8 @@ def _events(cs: CompiledSchedule):
 
 def block_dependencies(
     cs: CompiledSchedule,
+    *,
+    lift_zero_block: bool = True,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Message-level block-dependency DAG as a CSR ``(dep_ptr, dep_ids)``.
 
@@ -124,6 +126,23 @@ def block_dependencies(
     Linking only the earliest provider (rather than every delivery of the
     block) is sound for earliest-round packing — providers are processed
     first in original round order — and keeps the graph O(hops).
+
+    **Zero-block messages** (ISSUE 4): ``schedule_ir.split_messages`` with a
+    factor above the block count emits parts that carry payload bytes but
+    *no* block ids — their bytes belong to a block attributed to a
+    co-``(round, src, dst)`` sibling, so they have no block-hop events and,
+    naively, no causality edges.  A message-granularity packer would be free
+    to hoist such a part ahead of its payload's producer (or strand it
+    behind a forwarder that thinks the block already arrived).  With
+    ``lift_zero_block=True`` (the default) the export pins the intended
+    "split parts are one payload" semantics: a zero-block message inherits
+    the dependency set of its block-carrying co-``(round, src, dst)``
+    siblings, and every consumer of a block additionally depends on the
+    zero-block siblings of its provider (a block is usable only strictly
+    after *all* parts of the delivering payload).  Round-granularity passes
+    (``ReorderRounds``/``CompactRounds``) never separate co-round siblings,
+    so they are safe either way; the lift is what makes message-granularity
+    packing (``ColorRounds``) sound on split schedules.
 
     Raises ``ValueError`` if the schedule has no block metadata and
     ``AssertionError`` if some requirement has no provider at all (the
@@ -172,6 +191,39 @@ def block_dependencies(
         prov_mid = provider[idx]
     else:
         prov_mid = np.empty(0, dtype=np.int64)
+
+    # --- zero-block lift: split parts share their siblings' constraints ---
+    if lift_zero_block and prov_mid.size and bool((nblk == 0).any()):
+        mrid = cs.round_ids()
+        gkey = (mrid * cs.p + cs.src) * cs.p + cs.dst
+        _, gid = np.unique(gkey, return_inverse=True)
+        G = int(gid.max()) + 1
+        zmsg = np.flatnonzero(nblk == 0)
+        zg = gid[zmsg]
+        zsorted = zmsg[np.argsort(zg, kind="stable")]
+        zcnt = np.bincount(zg, minlength=G)
+        zptr = np.zeros(G + 1, dtype=np.int64)
+        np.cumsum(zcnt, out=zptr[1:])
+
+        def _expand(side_gids):
+            """Zero-block siblings of each edge endpoint's group, flattened;
+            returns (edge_index_per_new_entry, sibling_msg_ids)."""
+            rep = zcnt[side_gids]
+            eidx = np.repeat(np.arange(side_gids.size, dtype=np.int64), rep)
+            base = np.repeat(zptr[side_gids], rep)
+            return eidx, zsorted[base + segmented_arange(rep)]
+
+        # requirement side: each zero-block sibling of a requirer inherits
+        # the requirer's providers (the part carries the same payload).
+        eidx, sibs = _expand(gid[req_mid])
+        req_mid = np.concatenate([req_mid, sibs])
+        prov_mid = np.concatenate([prov_mid, prov_mid[eidx]])
+        # acquisition side: a consumer additionally waits for every
+        # zero-block sibling of its provider (the block is usable only
+        # after ALL parts of the delivering payload have arrived).
+        eidx, sibs = _expand(gid[prov_mid])
+        req_mid = np.concatenate([req_mid, req_mid[eidx]])
+        prov_mid = np.concatenate([prov_mid, sibs])
 
     # unique (requirer, provider) edges, CSR over requirer
     if prov_mid.size:

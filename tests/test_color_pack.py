@@ -1,0 +1,363 @@
+"""ISSUE 4: the conflict-graph coloring round packer (``ColorRounds``),
+cost-aware k-lane payload splitting (``SplitPayloads(machine=...)``), the
+zero-block split-part causality lift in ``validate.block_dependencies``,
+the shared simulator costing hooks, and the ``merge(split(...))``
+round-trip property on all four alltoall families and both machine
+models."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import schedule as S
+from repro.core import schedule_ir as IR
+from repro.core import selector
+from repro.core.passes import (
+    ColorRounds,
+    PassManager,
+    ReorderRounds,
+    SplitPayloads,
+    optimize_schedule,
+)
+from repro.core.simulate import lane_time, port_time, simulate
+from repro.core.topology import (
+    Machine,
+    Topology,
+    hydra_machine,
+    nvlink_ib_machine,
+)
+from repro.core.validate import block_dependencies, validate_schedule
+
+HYDRA = hydra_machine()
+
+
+def _machine(topo: Topology) -> Machine:
+    return Machine(topo=topo, cost=HYDRA.cost)
+
+
+# ---------------------------------------------------------------------------
+# ColorRounds: packing behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_color_requires_blocks_and_divisible_nodes():
+    blockless = IR.compile_schedule(S.kported_scatter(8, 2, 3))
+    with pytest.raises(ValueError, match="block"):
+        ColorRounds(limit=1, procs_per_node=4).apply(blockless)
+    cs = IR.kported_alltoall_ir(8, 2, 3)
+    with pytest.raises(ValueError, match="divisible"):
+        ColorRounds(limit=1, procs_per_node=3).apply(cs)
+
+
+def test_color_identity_when_input_already_packed():
+    """A schedule the coloring reproduces exactly comes back as the same
+    object (so PassManager records it as not-applied)."""
+    cs = IR.kported_alltoall_ir(8, 2, 3)  # ceil(7/2)=4 saturated rounds
+    assert ColorRounds(limit=2, procs_per_node=4).apply(cs) is cs
+
+
+def test_color_respects_dependency_chains():
+    """Bruck's phases are fully chained; with the refined class-purity rule
+    (an intra message already network-priced in its input round may share a
+    color with inter traffic) the coloring reproduces exactly the nonempty
+    phase count — no more, no less."""
+    cs = IR.bruck_alltoall_ir(27, 2, 5)
+    nonempty = int((np.diff(cs.round_ptr) > 0).sum())
+    col = ColorRounds(limit=None, procs_per_node=9, mult=4).apply(cs)
+    assert col.num_rounds == nonempty
+    assert validate_schedule(col).ok
+
+
+def test_color_budget_ladder_on_klane_alltoall():
+    """The klane alltoall packs to ceil(inter/L) + ceil(intra/L) at budget
+    L — message granularity reproduces the optimal regular packing at
+    every rung of the ladder."""
+    topo = Topology(4, 6, 2)
+    cs = IR.compiled_schedule("alltoall", "klane", topo, 2, 7)
+    N, n = 4, 6
+    for mult in (1, 2, 4):
+        L = mult * cs.k
+        col = ColorRounds(limit=None, procs_per_node=n, mult=mult).apply(cs)
+        assert col.num_rounds == -(-(N - 1) * n // L) + -(-(n - 1) // L)
+        assert validate_schedule(col).ok
+        assert col.total_elems() == cs.total_elems()
+
+
+def test_color_splits_rounds_first_fit_cannot():
+    """Message granularity: the broadcast tree's sender-side waves pack
+    below what whole-round first-fit reaches (the k-lane broadcast at the
+    paper topology: first-fit stops at 23 rounds, coloring reaches <= 12)."""
+    topo = Topology(36, 32, 2)
+    base = IR.compiled_schedule("broadcast", "klane", topo, 2, 10_000)
+    ff = ReorderRounds(limit=None, procs_per_node=32).apply(base)
+    ff = ReorderRounds(limit=2 * base.k, procs_per_node=32).apply(ff)
+    col = ColorRounds(limit=None, procs_per_node=32, mult=4).apply(base)
+    assert col.num_rounds < ff.num_rounds < base.num_rounds
+    assert validate_schedule(col).ok
+    assert (
+        simulate(col, HYDRA, ported=True).time_us
+        < simulate(ff, HYDRA, ported=True).time_us
+    )
+
+
+@pytest.mark.parametrize("op_alg", sorted(S.ALGORITHMS))
+def test_color_valid_and_lex_raced_never_worse(op_alg):
+    """ColorRounds is not provably never-slower, so the contract is: every
+    coloring is oracle-valid and volume-preserving, and under the lex
+    policy (raced against the first-fit baseline) the pipeline result is
+    never slower than the input on either port model."""
+    op, alg = op_alg
+    topo = Topology(3, 4, 2)
+    machine = _machine(topo)
+    cs = IR.compiled_schedule(op, alg, topo, 2, 13)
+    for mult in (1, 4):
+        col = ColorRounds(limit=None, procs_per_node=4, mult=mult).apply(cs)
+        assert validate_schedule(col).ok
+        assert col.total_elems() == cs.total_elems()
+    for ported in (False, True):
+        pm = PassManager(
+            [
+                ReorderRounds(limit=None, procs_per_node=4),
+                ColorRounds(limit=None, procs_per_node=4, mult=4),
+            ],
+            machine=machine,
+            ported=ported,
+            policy="lex",
+            validate=True,
+        )
+        opt, _ = pm.run(cs)
+        assert validate_schedule(opt).ok
+        assert (
+            simulate(opt, machine, ported=ported).time_us
+            <= simulate(cs, machine, ported=ported).time_us + 1e-9
+        )
+
+
+def test_color_headline_klane_alltoall_paper_scale():
+    """ISSUE 4 acceptance: at the paper's 36x32/k=2 the coloring packer
+    must pack the k-lane alltoall below PR 3's 288 first-fit rounds
+    (target <= 260) with >= 4.2x simulated at c=1, oracle-valid."""
+    topo = Topology(36, 32, 2)
+    base = IR.klane_alltoall_ir(topo, 1)
+    ff = ReorderRounds(limit=None, procs_per_node=32).apply(base)
+    ff = ReorderRounds(limit=2 * base.k, procs_per_node=32).apply(ff)
+    assert ff.num_rounds == 288  # PR 3's first-fit plateau
+    col = ColorRounds(limit=None, procs_per_node=32, mult=4).apply(base)
+    assert col.num_rounds < ff.num_rounds
+    assert col.num_rounds <= 260
+    base_us = simulate(base, HYDRA).time_us
+    col_us = simulate(col, HYDRA).time_us
+    assert base_us / col_us >= 4.2
+    assert col_us < simulate(ff, HYDRA).time_us
+    assert validate_schedule(col).ok
+    assert col.total_elems() == base.total_elems()
+
+
+def test_optimize_mode_color_via_cache_and_selector_parse():
+    topo = Topology(4, 6, 2)
+    base = IR.compiled_schedule("alltoall", "klane", topo, 2, 7)
+    opt = IR.compiled_schedule("alltoall", "klane", topo, 2, 7, optimize="color")
+    assert opt.num_rounds < base.num_rounds
+    assert (
+        IR.compiled_schedule("alltoall", "klane", topo, 2, 7, optimize="color")
+        is opt
+    )
+    assert selector._parse_alg("opt:klane") == ("klane", "color")
+    with pytest.raises(ValueError, match="topology"):
+        optimize_schedule(base, "color")  # mode needs topo= or machine=
+
+
+# ---------------------------------------------------------------------------
+# zero-block split parts: the dependency lift (ISSUE 4 bugfix satellite)
+# ---------------------------------------------------------------------------
+
+
+def _forward_chain_split():
+    """p=6 alltoall fragment: 0 -> 1 delivers block (0->2), 1 -> 2 forwards
+    it (split into 4 parts, 3 of them zero-block), 2 -> 3 forwards on."""
+    p = 6
+    sch = S.Schedule(
+        op="alltoall",
+        algorithm="toy",
+        p=p,
+        k=1,
+        rounds=(
+            S.Round((S.Msg(0, 1, 8, (2,)),)),
+            S.Round((S.Msg(1, 2, 8, (2,)),)),
+            S.Round((S.Msg(2, 3, 8, (2,)),)),
+        ),
+    )
+    cs = IR.compile_schedule(sch, with_blocks=True)
+    sp = IR.split_messages(cs, np.array([1, 4, 1], dtype=np.int64))
+    assert np.diff(sp.blk_ptr).tolist() == [1, 1, 0, 0, 0, 1]
+    return sp
+
+
+def test_zero_block_parts_have_no_edges_without_lift():
+    """Pins the hazard the lift fixes: without it the zero-block parts are
+    dependency-free (a packer may hoist them ahead of their payload's
+    producer) and the downstream forwarder waits for only one part."""
+    sp = _forward_chain_split()
+    dep_ptr, dep_ids = block_dependencies(sp, lift_zero_block=False)
+    ndep = np.diff(dep_ptr)
+    assert ndep[2] == ndep[3] == ndep[4] == 0  # the zero-block parts
+    assert ndep[5] == 1  # forwarder waits for the one block-bearing part
+
+
+def test_zero_block_lift_pins_split_part_semantics():
+    """The lift: parts inherit their siblings' providers, and a consumer
+    waits for ALL parts of the delivering payload."""
+    sp = _forward_chain_split()
+    dep_ptr, dep_ids = block_dependencies(sp)
+
+    def deps(i):
+        return dep_ids[dep_ptr[i]:dep_ptr[i + 1]].tolist()
+
+    assert deps(1) == [0]
+    assert deps(2) == deps(3) == deps(4) == [0]  # requirement-side lift
+    assert deps(5) == [1, 2, 3, 4]  # acquisition-side lift: all parts
+
+
+def test_color_does_not_hoist_zero_block_parts():
+    """ISSUE 4 acceptance for the satellite: the message-granularity packer
+    keeps every split part strictly after the payload's producer and the
+    downstream forwarder strictly after every part."""
+    sp = _forward_chain_split()
+    col = ColorRounds(limit=8, procs_per_node=6).apply(sp)
+    # the toy is a partial alltoall: compare data-flow health against the
+    # input instead of the full-op postcondition
+    rep, base_rep = validate_schedule(col), validate_schedule(sp)
+    assert rep.causality_violations == 0
+    assert rep.missing_final == base_rep.missing_final
+    rid = col.round_ids()
+    provider_round = int(rid[col.src == 0][0])
+    part_rounds = rid[col.src == 1]
+    consumer_round = int(rid[col.src == 2][0])
+    assert (part_rounds > provider_round).all()
+    assert (consumer_round > part_rounds).all()
+
+
+# ---------------------------------------------------------------------------
+# cost-aware SplitPayloads + the shared costing hooks
+# ---------------------------------------------------------------------------
+
+
+def test_costing_hooks_match_simulator_reference():
+    """port_time/lane_time are THE simulator formulas: spot-check them
+    against the reference expressions for both port models."""
+    cost = HYDRA.cost
+    t = port_time(cost, 100.0, 1, True, 2, ported=False)
+    assert t == pytest.approx(cost.alpha_inter + cost.beta_inter * 100.0)
+    t = port_time(cost, 100.0, 4, True, 2, ported=True)
+    ref = max(
+        cost.alpha_inter + cost.beta_inter * 100.0 / 2, cost.alpha_inter * 2
+    )
+    assert t == pytest.approx(ref)
+    t = port_time(cost, 100.0, 4, False, 2, ported=True, alpha_batches=False)
+    assert t == pytest.approx(cost.alpha_intra + cost.beta_intra * 100.0 / 2)
+    t = lane_time(cost, 1000.0, 3, 2)
+    assert t == pytest.approx(cost.alpha_inter + cost.beta_inter * 1000.0 / 2)
+
+
+def test_cost_split_skips_zero_gain_splits():
+    """klane alltoall in the 1-ported model: every node already drives more
+    streams than lanes and the port term ignores the message count, so the
+    model prices every split at zero — the cost-aware pass must be an
+    identity where the uniform pass doubles the message count."""
+    topo = Topology(4, 6, 2)
+    cs = IR.compiled_schedule("alltoall", "klane", topo, 2, 7)
+    uniform = SplitPayloads(parts=2).apply(cs)
+    assert uniform.num_msgs == 2 * cs.num_msgs  # the junk the lex policy
+    # previously had to reject wholesale
+    assert SplitPayloads(machine=_machine(topo), ported=False).apply(cs) is cs
+
+
+def test_cost_split_matches_uniform_where_the_model_pays():
+    """k-ported model, lone senders: the alpha/beta trade-off predicts the
+    same lane-filling factors the uniform pass uses — same simulated time,
+    and never more messages."""
+    topo = Topology(4, 6, 2)
+    machine = _machine(topo)
+    cs = IR.compiled_schedule("broadcast", "klane", topo, 2, 10_000)
+    uniform = SplitPayloads(parts=topo.k_lanes).apply(cs)
+    costed = SplitPayloads(machine=machine, ported=True).apply(cs)
+    assert costed.num_msgs <= uniform.num_msgs
+    assert simulate(costed, machine, ported=True).time_us == pytest.approx(
+        simulate(uniform, machine, ported=True).time_us, rel=1e-12
+    )
+    assert (
+        simulate(costed, machine, ported=True).time_us
+        < simulate(cs, machine, ported=True).time_us - 1e-9
+    )
+    assert validate_schedule(costed).ok
+
+
+def test_cost_split_identity_in_one_ported_model_is_not_a_forgone_gain():
+    """In the 1-ported model no split can pay: the sender's port serializes
+    its bytes regardless of message count, and in a lane-starved round the
+    worst port term already dominates the node lane term.  The cost-aware
+    pass is an identity there — and the uniform split on the same schedule
+    indeed buys nothing (same simulated time, more messages), confirming
+    the identity forgoes no gain even on a 1-stream-per-node broadcast."""
+    topo = Topology(4, 4, 4)
+    machine = _machine(topo)
+    cs = IR.compiled_schedule("broadcast", "kported", topo, 1, 100_000)
+    assert SplitPayloads(machine=machine, ported=False).apply(cs) is cs
+    uniform = SplitPayloads(parts=topo.k_lanes).apply(cs)
+    assert uniform.num_msgs > cs.num_msgs
+    assert simulate(uniform, machine).time_us == pytest.approx(
+        simulate(cs, machine).time_us, rel=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# merge(split(...)) round-trip property (ISSUE 4 test-coverage satellite)
+# ---------------------------------------------------------------------------
+
+
+def _canon(cs):
+    """Messages sorted by (round, src, dst) — merge_messages' output order."""
+    rid = cs.round_ids()
+    key = (rid * cs.p + cs.src) * cs.p + cs.dst
+    order = np.argsort(key, kind="stable")
+    blk_ptr, blk_ids = IR.gather_block_csr(cs.blk_ptr, cs.blk_ids, order)
+    return dataclasses.replace(
+        cs,
+        src=cs.src[order],
+        dst=cs.dst[order],
+        elems=cs.elems[order],
+        blk_ptr=blk_ptr,
+        blk_ids=blk_ids,
+        _stats={},
+    )
+
+
+_A2A_FAMILIES = ["kported", "bruck", "klane", "fulllane"]
+
+
+@pytest.mark.parametrize("alg", _A2A_FAMILIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_merge_split_roundtrip_bit_exact(alg, seed):
+    """merge_messages(split_messages(cs, f)) is bit-exact (up to the
+    canonical in-round message order) for random factor vectors including
+    f > elems and f > nblk, on all four alltoall families; the simulated
+    cost is unchanged on both machine models and both port models."""
+    topo = Topology(3, 4, 2)
+    cs = IR.compiled_schedule("alltoall", alg, topo, 2, 3)
+    assert IR.merge_messages(cs) is cs  # no same-(round,src,dst) duplicates
+    rng = np.random.default_rng(seed * 7919 + len(alg))
+    hi = int(max(cs.elems.max(), np.diff(cs.blk_ptr).max())) * 2 + 2
+    factors = rng.integers(1, hi, size=cs.num_msgs)
+    sp = IR.split_messages(cs, factors)
+    assert sp.total_elems() == cs.total_elems()
+    assert validate_schedule(sp).ok
+    rt = IR.merge_messages(sp)
+    canon = _canon(cs)
+    for f in ("src", "dst", "elems", "round_ptr", "blk_ptr", "blk_ids"):
+        assert np.array_equal(getattr(rt, f), getattr(canon, f)), (alg, f)
+    for machine in (_machine(topo), Machine(topo=topo, cost=nvlink_ib_machine().cost)):
+        for ported in (False, True):
+            assert simulate(rt, machine, ported=ported).time_us == pytest.approx(
+                simulate(cs, machine, ported=ported).time_us, rel=1e-12
+            )

@@ -174,7 +174,10 @@ def test_optimize_mode_reorder_via_cache_and_selector_parse():
     assert IR.compiled_schedule(
         "alltoall", "klane", topo, 2, 7, optimize="reorder"
     ) is opt
-    assert selector._parse_alg("opt:klane") == ("klane", "reorder")
+    # opt: now resolves to the ISSUE 4 coloring packer (see
+    # tests/test_color_pack.py); the reorder mode itself stays available
+    assert selector._parse_alg("opt:klane") == ("klane", "color")
+    assert selector._parse_alg("klane") == ("klane", None)
     with pytest.raises(ValueError, match="topology"):
         optimize_schedule(base, "reorder")  # mode needs topo= or machine=
 
@@ -446,6 +449,30 @@ def test_crossover_table_midpoint_now_exact():
     assert est_mid == pytest.approx(direct, rel=1e-9)
 
 
+def test_proxy_machine_preserves_lane_count():
+    """ISSUE 4 satellite: the fast-simulation proxy used to clamp
+    ``k_lanes`` to the shrunken intra-node dimension with no compensation,
+    mispricing every k-lane family whenever k_lanes > 16.  The proxy now
+    shrinks only down to the lane count (and not at all when the lanes
+    need every processor)."""
+    cost = hydra_machine().cost
+    # k_lanes within the default cap: proxy shrinks to 16, k preserved
+    m = Machine(topo=Topology(2, 256, 8), cost=cost)
+    proxy, scale = selector._proxy_machine(m)
+    assert proxy.topo.procs_per_node == 16 and proxy.topo.k_lanes == 8
+    assert scale == 256 / 16
+    # regression regime: k_lanes > 16 must survive the proxy untouched
+    m = Machine(topo=Topology(2, 64, 32), cost=cost)
+    proxy, scale = selector._proxy_machine(m)
+    assert proxy.topo.k_lanes == 32  # was min(32, 16) == 16 before the fix
+    assert proxy.topo.procs_per_node == 32
+    assert scale == 64 / 32
+    # full-lane mesh: no shrink is possible without repricing — refuse
+    m = Machine(topo=Topology(4, 64, 64), cost=cost)
+    proxy, scale = selector._proxy_machine(m)
+    assert proxy is m and scale == 1.0
+
+
 # ---------------------------------------------------------------------------
 # bench gate + CI workflow (satellites)
 # ---------------------------------------------------------------------------
@@ -483,6 +510,27 @@ def test_bench_gate_fails_on_10pct_regression(tmp_path):
     proc = _gate(tmp_path, base, fresh)
     assert proc.returncode == 1
     assert "FAIL" in proc.stdout and "+10.0%" in proc.stdout
+
+
+def test_bench_gate_zero_baseline_cell_uses_abs_tol(tmp_path):
+    """ISSUE 4 satellite: a zero (or near-zero) baseline sim_us cell must
+    neither crash the gate nor fail on float jitter — the relative ratio is
+    clamped and the --abs-tol floor governs; tightening --abs-tol re-arms
+    the check."""
+    base = [_cell("a", 0.0), _cell("b", 1e-6)]
+    fresh = [_cell("a", 0.01), _cell("b", 0.02)]
+    proc = _gate(tmp_path, base, fresh)  # default --abs-tol 0.05 us
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+    proc = _gate(tmp_path, base, fresh, "--abs-tol", "0.001")
+    assert proc.returncode == 1
+    assert "FAIL" in proc.stdout
+
+
+def test_bench_gate_abs_tol_does_not_mask_real_regressions(tmp_path):
+    proc = _gate(tmp_path, [_cell("a", 100.0)], [_cell("a", 110.0)],
+                 "--abs-tol", "0.05")
+    assert proc.returncode == 1 and "+10.0%" in proc.stdout
 
 
 def test_bench_gate_fails_on_disappeared_cell_and_zero_cells(tmp_path):

@@ -17,12 +17,19 @@ def test_selector_crossover_broadcast():
     assert large == "fulllane"  # bandwidth regime: problem splitting wins
 
 
-def test_selector_alltoall_small_prefers_combining():
+def test_selector_alltoall_small_prefers_round_frugal():
     ch = select("alltoall", 1 << 4, num_nodes=2, procs_per_node=256, k_lanes=8)
-    # round-count-frugal families win the latency regime; the schedule
-    # optimizer's compacted variants (opt:) may flip ahead of their bases
-    family = ch.algorithm.removeprefix("opt:")
-    assert family in ("bruck", "fulllane")
+    # round-count-frugal schedules win the latency regime.  Unoptimized
+    # that means the combining families (bruck/fulllane); the ISSUE 4
+    # coloring packer also collapses the k-lane alltoall's (N-1)*n steps
+    # to ~ceil((N-1)*n/4k) rounds, so its opt: variant may win the race
+    # outright — a plain klane choice would still be a selector bug.
+    if ch.algorithm.startswith("opt:"):
+        assert ch.algorithm.removeprefix("opt:") in (
+            "bruck", "fulllane", "klane"
+        )
+    else:
+        assert ch.algorithm in ("bruck", "fulllane")
 
 
 def test_selector_candidates_ranked():

@@ -8,7 +8,17 @@ baseline, cell by cell, keyed by ``(table, impl, k, c)``.  The gate fails
 * the fresh file is missing or holds zero cells (``benchmarks.run``
   produced nothing — a broken table is a failure, not a pass),
 * a baseline cell disappeared from the fresh run, or
-* any cell's ``sim_us`` regressed by more than ``--tol`` (default 5%).
+* any cell's ``sim_us`` regressed by more than ``--tol`` (default 5%),
+  with an ``--abs-tol`` absolute floor (default 0.05 us) under which a
+  drift never fails.
+
+The absolute slack exists for zero/near-zero baseline cells (ISSUE 4
+satellite): a purely relative tolerance is meaningless at a ~0 us
+baseline — the old ``f_us > b_us * (1 + tol) + 1e-9`` check failed such a
+cell on any float jitter, and the reported ratio (guarded to 0.0 only at
+exactly b_us == 0) exploded for near-zero baselines.  The ratio's
+denominator is now clamped to the slack and a sub-``--abs-tol`` drift
+never fails regardless of its relative size.
 
 New cells in the fresh run are reported but never fail the gate — adding
 coverage is always allowed.  To bless an intentional change::
@@ -50,6 +60,15 @@ def main(argv=None) -> int:
         type=float,
         default=0.05,
         help="allowed relative sim_us regression per cell (default: 5%%)",
+    )
+    ap.add_argument(
+        "--abs-tol",
+        type=float,
+        default=0.05,
+        dest="abs_tol",
+        help="absolute sim_us drift floor under which a cell never fails "
+        "(guards zero/near-zero baseline cells; cells whose relative "
+        "tolerance exceeds it are unaffected; default: %(default)s us)",
     )
     ap.add_argument(
         "--update-baseline",
@@ -96,10 +115,14 @@ def main(argv=None) -> int:
             failures.append(f"cell {key} disappeared from the fresh run")
             continue
         b_us, f_us = float(bcell["sim_us"]), float(fcell["sim_us"])
-        rel = (f_us - b_us) / b_us if b_us else 0.0
+        # clamped denominator: a zero/near-zero baseline cell must not blow
+        # the ratio up (or crash); the abs-tol floor is what governs it
+        rel = (f_us - b_us) / max(b_us, args.abs_tol, 1e-12)
         if rel > worst_rel:
             worst_key, worst_rel = key, rel
-        if f_us > b_us * (1.0 + args.tol) + 1e-9:
+        # abs-tol is a *floor*, not additive slack: cells big enough for the
+        # relative tolerance to exceed it keep exactly the old threshold
+        if f_us > max(b_us * (1.0 + args.tol), b_us + args.abs_tol):
             failures.append(
                 f"cell {key}: sim_us {b_us:.3f} -> {f_us:.3f} "
                 f"(+{rel * 100:.1f}% > {args.tol * 100:.1f}% tolerance)"

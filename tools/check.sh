@@ -35,7 +35,8 @@ else
         tests/test_simulator.py \
         tests/test_passes.py \
         tests/test_validate.py \
-        tests/test_reorder_split.py
+        tests/test_reorder_split.py \
+        tests/test_color_pack.py
 fi
 
 # lint (CI-fast-job parity): ruff when installed, else a compile check.
@@ -49,11 +50,14 @@ if [[ "${CHECK_SKIP_LINT:-0}" != "1" ]]; then
     fi
 fi
 
-# benchmark smoke -> fresh trajectory; the gate fails on zero cells, a
-# disappeared cell, or any >5% sim_us regression vs the committed baseline.
+# benchmark smoke -> fresh trajectory + the OPT/OPT2/OPT3 delta table (the
+# delta file is the CI artifact reviewers diff); the gate fails on zero
+# cells, a disappeared cell, or any >5% sim_us regression vs the committed
+# baseline (with the --abs-tol floor guarding near-zero cells).
 FRESH="BENCH_schedules.fresh.json"
-rm -f "$FRESH"
+DELTAS="BENCH_deltas.fresh.txt"
+rm -f "$FRESH" "$DELTAS"
 timeout "$T" python -m benchmarks.run --only paper --json "$FRESH" \
-    | tail -n 25
+    --deltas "$DELTAS" | tail -n 30
 python tools/bench_gate.py "$FRESH" --baseline BENCH_schedules.json
 echo "check.sh: OK"
