@@ -19,10 +19,16 @@ trajectory attached for the optimized-vs-paper delta table
 (``render_optimizer_deltas``).  ``table_optimizer_deltas2`` (OPT2) runs
 the ISSUE 3 scheduling-pass suite — non-adjacent round reordering and
 k-lane payload splitting under the fixpoint lexicographic PassManager.
-``table_optimizer_deltas3`` (OPT3, ISSUE 4) races the conflict-graph
-coloring packer's budget ladder against the first-fit baseline and adds
-the paper-scale (p=1152) broadcast-tree cells; all three trajectories are
-what ``tools/bench_gate.py`` gates in CI.
+``table_optimizer_deltas3`` (OPT3, ISSUE 4/5) races the conflict-graph
+coloring packer — at the single budget rung the cost-aware chooser picks
+(ISSUE 5), with tree-aware byte caps in the bandwidth regime — against
+the first-fit baseline, over the paper-scale (p=1152) alltoall families
+(klane, fulllane, kported) and broadcast trees; all three trajectories
+are what ``tools/bench_gate.py`` gates in CI.  ``table_paper_opt_smoke``
+(``--only paper-opt``) reruns one of those alltoall cells as the CI
+fast-job scalability smoke.  OPT cells carry ``opt_wall_s`` — the
+optimizer's own wall-clock — so pass-pipeline speed is on the trajectory
+too (the gate stays on ``sim_us``).
 
 All cells run on the compiled schedule IR (``repro.core.schedule_ir``):
 the alltoall families are generated array-natively and every schedule is
@@ -203,7 +209,9 @@ def table_optimizer_deltas():
                 policy="improved",
                 validate=True,
             )
+            t_opt = time.perf_counter()
             opt, records = pm.run(base)
+            opt_wall = time.perf_counter() - t_opt
             opt_us = simulate(opt, M).time_us
             rows.append(
                 {
@@ -214,6 +222,7 @@ def table_optimizer_deltas():
                     "sim_us": opt_us,
                     "paper_us": PAPER.get((impl[4:], gen_k, c), ""),
                     "wall_s": time.perf_counter() - t0,
+                    "opt_wall_s": opt_wall,
                     "base_us": base_us,
                     "rounds_before": base.num_rounds,
                     "rounds_after": opt.num_rounds,
@@ -266,7 +275,9 @@ def table_optimizer_deltas2():
                 validate=True,
                 fixpoint=True,
             )
+            t_opt = time.perf_counter()
             opt, records = pm.run(base)
+            opt_wall = time.perf_counter() - t_opt
             # the lex PassManager already timed both endpoints (bit-exact:
             # same simulate() under the same machine/port model)
             base_us = records[0].time_before_us
@@ -281,6 +292,7 @@ def table_optimizer_deltas2():
                     "sim_us": opt_us,
                     "paper_us": PAPER.get((impl[5:], gen_k, c), ""),
                     "wall_s": time.perf_counter() - t0,
+                    "opt_wall_s": opt_wall,
                     "base_us": base_us,
                     "rounds_before": base.num_rounds,
                     "rounds_after": opt.num_rounds,
@@ -291,95 +303,141 @@ def table_optimizer_deltas2():
     return rows
 
 
+#: OPT3 cases (ISSUE 5): the paper-scale (p=1152) alltoall families —
+#: klane (the PR 3/4 headline), **fulllane and kported** (newly tractable
+#: at message granularity) — plus the broadcast trees.  Shared with the
+#: ``--only paper-opt`` CI smoke, which runs exactly one of these cells.
+OPT3_CASES = [
+    # (impl, op, alg, gen_k, payloads, ported-sim)
+    ("opt3:klane_a2a", "alltoall", "klane", 32, [1, 869], False),
+    ("opt3:fulllane_a2a", "alltoall", "fulllane", 6, [1, 869], False),
+    ("opt3:kported_a2a", "alltoall", "kported", 6, [1, 869], False),
+    ("opt3:kported_bcast", "broadcast", "kported", 2, [10_000], True),
+    ("opt3:kported_bcast", "broadcast", "kported", 6,
+     [10_000, 1_000_000], True),
+    ("opt3:klane_bcast", "broadcast", "klane", 2,
+     [10_000, 1_000_000], True),
+    ("opt3:fulllane_bcast", "broadcast", "fulllane", 6, [1_000_000], True),
+]
+
+
+def _opt3_cell(impl, op, alg, gen_k, c, ported, table="OPT3"):
+    """One OPT3 cell: first-fit baseline + cost-aware splitting, then the
+    coloring packer at the budget rung the cost-aware chooser picks
+    (``ColorRounds(mult=None, machine=...)`` — ISSUE 5: one chooser-priced
+    rung instead of racing the {2k, 4k} ladder), all under the lex policy
+    with every kept rewrite oracle-checked (incrementally where the
+    rewrite window allows).  ``opt_wall_s`` records the optimizer's own
+    wall-clock (the PassManager run only — generation and the surrounding
+    bookkeeping excluded), putting pass-pipeline speed itself on the
+    trajectory; the gate stays on ``sim_us``."""
+    n = TOPO.procs_per_node
+    t0 = time.perf_counter()
+    base = compiled_schedule(op, alg, TOPO, gen_k, c)
+    pm = PassManager(
+        [
+            ReorderRounds(limit=None, procs_per_node=n),
+            ReorderRounds(limit=2 * base.k, procs_per_node=n),
+            SplitPayloads(machine=M, ported=ported),
+            ColorRounds(
+                limit=None, procs_per_node=n, mult=None,
+                machine=M, ported=ported,
+            ),
+            CoalesceMessages(),
+        ],
+        machine=M,
+        ported=ported,
+        policy="lex",
+        validate=True,
+        fixpoint=True,
+        max_iters=2,
+    )
+    t_opt = time.perf_counter()
+    opt, records = pm.run(base)
+    opt_wall = time.perf_counter() - t_opt
+    base_us = records[0].time_before_us
+    last = records[-1]
+    opt_us = last.time_after_us if last.applied else last.time_before_us
+    return {
+        "table": table,
+        "impl": impl,
+        "k": gen_k,
+        "c": c,
+        "sim_us": opt_us,
+        "paper_us": PAPER.get((impl.split(":", 1)[-1], gen_k, c), ""),
+        "wall_s": time.perf_counter() - t0,
+        "opt_wall_s": opt_wall,
+        "base_us": base_us,
+        "rounds_before": base.num_rounds,
+        "rounds_after": opt.num_rounds,
+        "ported": ported,
+        "passes": [r.as_dict() for r in records],
+    }
+
+
 def table_optimizer_deltas3():
-    """ISSUE 4: the conflict-graph coloring packer at paper scale.  Each
+    """ISSUE 4/5: the conflict-graph coloring packer at paper scale.  Each
     cell runs the first-fit ``ReorderRounds`` baseline and cost-aware lane
     splitting (``SplitPayloads(machine=...)`` — per-message factors priced
     by the simulator's own alpha/beta formulas), then races the
-    ``ColorRounds`` budget ladder (2k and 4k) against that never-slower
-    baseline under the ``(time, rounds, msgs)`` lexicographic policy, with
-    every kept rewrite oracle-checked.  Splitting runs *before* the
-    coloring rungs on purpose: a colored schedule concentrates sender
+    ``ColorRounds`` rung picked by the cost-aware budget chooser (ISSUE 5
+    — one priced rung instead of the full {2k, 4k} ladder race, with the
+    tree-aware byte caps active in the bandwidth regime) against that
+    never-slower baseline under the ``(time, rounds, msgs)`` lexicographic
+    policy, every kept rewrite oracle-checked.  Splitting runs *before*
+    the coloring rung on purpose: a colored schedule concentrates sender
     bytes, so split-then-color reaches strictly better fixpoints on the
     ported broadcast cells (and the fixpoint sweep retries each pass on
     the other's output anyway).
 
-    Rows: the headline klane alltoall (36x32, k=2 lanes — the cell PR 3
-    packed to 288 rounds first-fit; the coloring packer must land below
-    260) plus the **broadcast trees at paper scale p=1152** the ROADMAP
-    names as the open reorder-aware OPT coverage: k-ported divide &
-    conquer, adapted k-lane, and full-lane.  Broadcast rows simulate
-    ``ported=True`` (where lane splitting pays); cells where eager
-    coloring loses to first-fit (bandwidth-bound trees concentrate root
-    bytes) record the lex-rejected attempt in ``passes`` — the trajectory
-    shows the race, not just the winner."""
-    n = TOPO.procs_per_node
-    cases = [
-        # (impl, op, alg, gen_k, payloads, ported-sim)
-        ("opt3:klane_a2a", "alltoall", "klane", 32, [1, 869], False),
-        ("opt3:kported_bcast", "broadcast", "kported", 2, [10_000], True),
-        ("opt3:kported_bcast", "broadcast", "kported", 6,
-         [10_000, 1_000_000], True),
-        ("opt3:klane_bcast", "broadcast", "klane", 2,
-         [10_000, 1_000_000], True),
-        ("opt3:fulllane_bcast", "broadcast", "fulllane", 6, [1_000_000], True),
+    Rows (``OPT3_CASES``): the paper-scale alltoall families — klane (the
+    cell PR 3 packed to 288 first-fit rounds and PR 4's ladder to 144; the
+    chooser's deeper rung lands 72), plus **fulllane and kported at
+    p=1152** (ISSUE 5: the ~1.3M-message direct family the per-color
+    packer could not batch) — and the broadcast trees at p=1152.
+    Broadcast rows simulate ``ported=True`` (where lane splitting pays);
+    cells where coloring loses to first-fit record the lex-rejected
+    attempt in ``passes`` — the trajectory shows the race, not just the
+    winner."""
+    return [
+        _opt3_cell(impl, op, alg, gen_k, c, ported)
+        for impl, op, alg, gen_k, payloads, ported in OPT3_CASES
+        for c in payloads
     ]
-    rows = []
-    for impl, op, alg, gen_k, payloads, ported in cases:
-        for c in payloads:
-            t0 = time.perf_counter()
-            base = compiled_schedule(op, alg, TOPO, gen_k, c)
-            pm = PassManager(
-                [
-                    ReorderRounds(limit=None, procs_per_node=n),
-                    ReorderRounds(limit=2 * base.k, procs_per_node=n),
-                    SplitPayloads(machine=M, ported=ported),
-                    ColorRounds(limit=None, procs_per_node=n, mult=2),
-                    ColorRounds(limit=None, procs_per_node=n, mult=4),
-                    CoalesceMessages(),
-                ],
-                machine=M,
-                ported=ported,
-                policy="lex",
-                validate=True,
-                fixpoint=True,
-                max_iters=2,
-            )
-            opt, records = pm.run(base)
-            base_us = records[0].time_before_us
-            last = records[-1]
-            opt_us = last.time_after_us if last.applied else last.time_before_us
-            rows.append(
-                {
-                    "table": "OPT3",
-                    "impl": impl,
-                    "k": gen_k,
-                    "c": c,
-                    "sim_us": opt_us,
-                    "paper_us": PAPER.get((impl[5:], gen_k, c), ""),
-                    "wall_s": time.perf_counter() - t0,
-                    "base_us": base_us,
-                    "rounds_before": base.num_rounds,
-                    "rounds_after": opt.num_rounds,
-                    "ported": ported,
-                    "passes": [r.as_dict() for r in records],
-                }
-            )
-    return rows
+
+
+def table_paper_opt_smoke():
+    """ISSUE 5 CI satellite: a single paper-scale (p=1152) alltoall OPT
+    cell (``--only paper-opt``) so the optimizer's scalability cannot
+    silently regress in the fast job.  Uses its own table name (never in
+    the blessed baseline, so the gate treats it as informational), and the
+    fulllane family — dependency-carrying at ~2.6M block hops, the
+    heaviest oracle + packer combination."""
+    return [
+        _opt3_cell(
+            "opt3s:fulllane_a2a", "alltoall", "fulllane", 6, 1, False,
+            table="OPT3-SMOKE",
+        )
+    ]
 
 
 def render_optimizer_deltas(rows) -> list[str]:
     """Human-readable optimized-vs-paper delta lines for the OPT/OPT2/OPT3
-    cells."""
-    out = ["# optimizer: table,impl,c,rounds,opt_rounds,base_us,opt_us,speedup,paper_us"]
+    cells (plus the CI paper-opt smoke when present).  ``opt_wall`` is the
+    optimizer's own wall-clock per cell (ISSUE 5 satellite) — pass-pipeline
+    speed is on the trajectory, though the CI gate stays on ``sim_us``."""
+    out = [
+        "# optimizer: table,impl,c,rounds,opt_rounds,base_us,opt_us,"
+        "speedup,opt_wall_s,paper_us"
+    ]
     for r in rows:
-        if r.get("table") not in ("OPT", "OPT2", "OPT3"):
+        if r.get("table") not in ("OPT", "OPT2", "OPT3", "OPT3-SMOKE"):
             continue
         speedup = r["base_us"] / r["sim_us"] if r["sim_us"] else float("inf")
         out.append(
             f"# optimizer: {r['table']},{r['impl']},{r['c']},{r['rounds_before']},"
             f"{r['rounds_after']},{r['base_us']:.2f},{r['sim_us']:.2f},"
-            f"{speedup:.2f}x,{r['paper_us']}"
+            f"{speedup:.2f}x,{r.get('opt_wall_s', 0.0):.2f},{r['paper_us']}"
         )
     return out
 

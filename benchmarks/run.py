@@ -27,7 +27,8 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["paper", "tpu", "hlo", "roofline"],
+    ap.add_argument("--only",
+                    choices=["paper", "paper-opt", "tpu", "hlo", "roofline"],
                     default=None)
     ap.add_argument("--skip-hlo", action="store_true")
     ap.add_argument("--json", metavar="FILE", default=None,
@@ -57,6 +58,23 @@ def main() -> None:
                 f.write("\n".join(delta_lines) + "\n")
             print(f"# wrote optimizer delta table to {args.deltas}",
                   flush=True)
+    elif args.only == "paper-opt":
+        # ISSUE 5 CI satellite: one paper-scale (p=1152) alltoall OPT cell,
+        # CHECK_TIMEOUT-bounded in tools/check.sh, so the optimizer's
+        # scalability cannot silently regress in the fast job.
+        from benchmarks.paper_tables import (
+            csv_row,
+            render_optimizer_deltas,
+            table_paper_opt_smoke,
+        )
+        for cell in table_paper_opt_smoke():
+            cells.append(cell)
+            print(csv_row(cell), flush=True)
+        for line in render_optimizer_deltas(cells):
+            print(line, flush=True)
+        if args.deltas:
+            print(f"# optimizer deltas only written for --only paper; "
+                  f"{args.deltas} not written", flush=True)
     elif args.deltas:
         # the OPT tables only run in the paper selection; stay loud rather
         # than silently skipping a requested output file
@@ -92,11 +110,13 @@ def main() -> None:
         print(f"# no simulator cells in this selection; {args.json} not written",
               flush=True)
     elif args.json:
-        # OPT/OPT2 cells additionally carry the optimizer trajectory: the
-        # unoptimized baseline, the round delta, the port model the cell
-        # was timed under, and the per-pass records.
+        # OPT/OPT2/OPT3 cells additionally carry the optimizer trajectory:
+        # the unoptimized baseline, the round delta, the port model the
+        # cell was timed under, the optimizer's own wall-clock
+        # (opt_wall_s — ISSUE 5 satellite; the gate stays on sim_us), and
+        # the per-pass records.
         opt_keys = ("base_us", "rounds_before", "rounds_after", "ported",
-                    "passes")
+                    "opt_wall_s", "passes")
         payload = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "cells": [

@@ -14,14 +14,17 @@ simulation:
     generate -> compile (schedule_ir) -> optimize (this module)
              -> validate (core.validate) -> simulate (core.simulate)
 
-Pipeline (ISSUE 4 update)
+Pipeline (ISSUE 5 update)
 -------------------------
 The optimizer sits between compilation and validation; within it, a
 :class:`PassManager` fixpoint-iterates a pass pipeline, timing each rewrite
 under the machine model and oracle-checking everything it keeps::
 
     compiled IR ──▶ PassManager ──ReorderRounds──▶ earliest-fit repack
-                        │  ▲      ──ColorRounds───▶ DSATUR conflict coloring
+                        │  ▲      ──ColorRounds───▶ bitset conflict coloring
+                        │  │          (64-color uint64 windows; budget rung
+                        │  │           from choose_color_budget; tree-aware
+                        │  │           byte caps in the bandwidth regime)
                         │  │      ──SplitPayloads─▶ cost-aware lane split
                         │  └──────CoalesceMessages/CompactRounds─ fixpoint
                         ▼
@@ -30,16 +33,39 @@ under the machine model and oracle-checking everything it keeps::
            ColorRounds packing must lex-beat to land)
                         │
                         ▼
-        validate.validate_schedule (every kept rewrite machine-checked)
+        validate.revalidate_schedule ──window-confined rewrite──▶ only the
+          affected blocks' hop chains rechecked (rewrite_window diff);
+          full validate_schedule otherwise — every kept rewrite is
+          machine-checked either way
                         │
                         ▼
                  simulate / BENCH_schedules.json trajectory (per-pass deltas)
+                        │
+                        ▼
+        schedule_ir optimized-schedule cache: entries keyed on
+          (op, algorithm, topo, k, c, root, opt_mode,
+          pipeline_fingerprint); recipe_safe pipelines run once per
+          structure and replay as a (morder, round_ptr) recipe at every
+          other payload size
 
 Cost model sharing: the cost-aware passes price rewrites with the
-*simulator's own* per-round port formula
-(:func:`repro.core.simulate.port_time`), so a predicted gain is exactly
-the gain the trajectory will record — there is no second, drifting copy of
-the machine model.
+*simulator's own* per-round formulas
+(:func:`repro.core.simulate.port_time` for the port terms,
+:func:`repro.core.simulate.lane_time` for the node rail term the budget
+chooser's proxy uses), so a predicted gain is exactly the gain the
+trajectory will record — there is no second, drifting copy of the machine
+model.
+
+Bitset-coloring memory bound (ISSUE 5): a naive DSATUR adjacency for an
+O(p^2)-message alltoall would need ``p^2 msgs x p^2/64`` uint64 words
+(~2e10 at p=1152); even per-message forbidden-color sets over all R
+colors are ``M x R/64`` words.  ``ColorRounds`` therefore colors through
+a sliding 64-color window whose packed per-(processor, side) bitsets are
+O(p) total, with one transient uint64 per candidate.  When packing
+degenerates anyway, the window still advances (termination is
+unconditional) and the lex race simply keeps the first-fit
+``ReorderRounds`` baseline — the pass "falls back to first-fit" by losing
+the race, never by shipping a worse schedule.
 
 Passes
 ------
@@ -108,6 +134,7 @@ array-native validity oracle: ``validate=True`` raises on a broken rewrite,
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Callable, Sequence
 
@@ -120,12 +147,15 @@ from repro.core.schedule_ir import (
     segmented_arange,
     split_messages,
 )
-from repro.core.simulate import port_time, simulate
+from repro.core.simulate import lane_time, port_time, simulate
 from repro.core.topology import Machine, Topology
 from repro.core.validate import (
     block_dependencies,
     initial_holds,
+    revalidate_schedule,
+    rewrite_window,
     validate_schedule,
+    window_hop_fraction,
 )
 
 __all__ = [
@@ -138,7 +168,26 @@ __all__ = [
     "PassManager",
     "optimize_schedule",
     "OPT_MODES",
+    "choose_color_budget",
+    "pipeline_fingerprint",
+    "PASS_PIPELINE_VERSION",
 ]
+
+#: Version salt for :func:`pipeline_fingerprint`.  Bump whenever a pass's
+#: *semantics* change without its ``name`` changing — the optimized-schedule
+#: cache in :mod:`repro.core.schedule_ir` keys on the fingerprint, so a bump
+#: invalidates every cached rewrite produced by the old semantics.
+PASS_PIPELINE_VERSION = "pr5.1"
+
+
+def pipeline_fingerprint(passes: Sequence) -> str:
+    """Stable fingerprint of a pass pipeline: the version salt plus every
+    pass's parameter-bearing ``name``, hashed.  Two pipelines with the same
+    fingerprint produce the same rewrite on the same input, so the
+    process-wide schedule cache may key optimized entries on it."""
+    names = ",".join(getattr(ps, "name", type(ps).__name__) for ps in passes)
+    raw = f"{PASS_PIPELINE_VERSION}|{names}"
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +221,10 @@ class ReorderRounds:
     ``procs_per_node`` is required for the class test (the IR itself does
     not know the node partitioning).  Requires block metadata.
     """
+
+    #: payload-independent message permutation + re-rounding: eligible for
+    #: the schedule cache's recipe layer (see schedule_ir).
+    recipe_safe = True
 
     def __init__(self, limit: int | None = None, *, procs_per_node: int):
         self.limit = limit
@@ -317,6 +370,166 @@ class ReorderRounds:
         )
 
 
+# --- bitset coloring helpers (ISSUE 5) -------------------------------------
+
+#: bit weight of each color slot in a 64-color window.
+_BITW = np.uint64(1) << np.arange(64, dtype=np.uint64)
+_U0 = np.uint64(0)
+_U1 = np.uint64(1)
+_UALL = np.uint64(0xFFFFFFFFFFFFFFFF)
+#: low-mask table: _BIT_LOW[i] has bits 0..i-1 set (colors below slot i).
+_BIT_LOW = _BITW - _U1
+
+
+def _ctz64(x: np.ndarray) -> np.ndarray:
+    """Index of the lowest set bit of each (nonzero) ``uint64``.  The
+    isolated low bit is a power of two, which float64 represents exactly up
+    to 2**63, so ``log2`` of the isolated bit is exact."""
+    low = x & (~x + _U1)
+    return np.log2(low.astype(np.float64)).astype(np.int64)
+
+
+def _side_groups(keys: np.ndarray, prank: np.ndarray):
+    """Sort one endpoint side's candidates by ``(keys, prank)`` — a single
+    argsort on the fused key, since prank values are globally unique — and
+    return ``(order, firsts, start_idx, gid_ord)``: the sort order, the
+    group-first flags, the index (into the sorted array) of each element's
+    group leader, and each sorted element's group id."""
+    n = keys.size
+    mul = np.int64(prank.max()) + 1 if n else np.int64(1)
+    order = np.argsort(keys * mul + prank)
+    sk = keys[order]
+    firsts = np.ones(n, dtype=bool)
+    if n:
+        firsts[1:] = sk[1:] != sk[:-1]
+    start_idx = np.maximum.accumulate(np.where(firsts, np.arange(n), 0))
+    gid_ord = np.cumsum(firsts) - 1
+    return order, firsts, start_idx, gid_ord
+
+
+def _dag_depth(dep_ptr: np.ndarray, dep_ids: np.ndarray) -> int:
+    """Critical-path length (in messages) of the block-dependency DAG: a
+    lower bound on any coloring's round count.  Wave relaxation over the
+    CSR — one ``reduceat`` per level, and the level count is the answer."""
+    M = dep_ptr.size - 1
+    rows = np.flatnonzero(np.diff(dep_ptr))
+    if rows.size == 0:
+        return 1 if M else 0
+    starts = dep_ptr[rows]
+    depth = np.ones(M, dtype=np.int64)
+    for _ in range(M):
+        upd = np.maximum.reduceat(depth[dep_ids], starts) + 1
+        if bool((depth[rows] >= upd).all()):
+            break
+        depth[rows] = np.maximum(depth[rows], upd)
+    return int(depth.max())
+
+
+def choose_color_budget(
+    cs: CompiledSchedule,
+    *,
+    procs_per_node: int,
+    machine: Machine | None = None,
+    ported: bool = False,
+    mults: Sequence[int] = (1, 2, 4, 8),
+    dep_csr: tuple[np.ndarray, np.ndarray] | None = None,
+) -> tuple[int, int]:
+    """Cost-aware budget chooser (ISSUE 5): pick the ``ColorRounds`` ladder
+    rung ``mult`` (port budget ``mult * cs.k``) by a cheap proxy of the
+    packed schedule's simulated time, instead of racing the whole ladder.
+
+    The proxy prices each rung with the *simulator's own* per-round
+    formulas: the packed color count is lower-bounded by
+    ``max(ceil(msgs/L))`` over senders and receivers and by the
+    block-dependency critical path, each sender's bytes spread evenly over
+    its colors feed :func:`repro.core.simulate.port_time`, and the node
+    rail term comes from :func:`repro.core.simulate.lane_time` — so the
+    rung ranking follows the same alpha/beta trade-off the lex race would
+    measure, at the cost of one array reduction per rung instead of a full
+    coloring + simulation.  Without a ``machine`` the chooser is purely
+    structural (and payload-independent): the deepest rung that still
+    shrinks the color-count lower bound — in the alpha-dominated regime
+    deeper packing amortizes more per-round latencies, and the selector
+    races ``opt:`` candidates against their bases anyway.
+
+    Returns ``(mult, limit)``.
+    """
+    p, M = cs.p, cs.num_msgs
+    k = max(cs.k, 1)
+    if M == 0:
+        return mults[0], max(mults[0] * k, 1)
+    if dep_csr is None:
+        dep_csr = block_dependencies(cs)
+    depth = _dag_depth(*dep_csr)
+    ms = np.bincount(cs.src, minlength=p)
+    mr = np.bincount(cs.dst, minlength=p)
+
+    def colors_lb(limit: int) -> int:
+        return int(
+            max(
+                -(-ms.max() // limit),
+                -(-mr.max() // limit),
+                depth,
+                1,
+            )
+        )
+
+    if machine is None:
+        best = mults[0]
+        best_lb = colors_lb(max(mults[0] * k, 1))
+        for m in mults[1:]:
+            lb = colors_lb(max(m * k, 1))
+            if lb < best_lb:
+                best, best_lb = m, lb
+        return best, max(best * k, 1)
+
+    cost, klanes = machine.cost, machine.topo.k_lanes
+    n = procs_per_node
+    ew = cs.elems.astype(np.float64)
+    bytes_s = np.bincount(cs.src, weights=ew, minlength=p)
+    bytes_r = np.bincount(cs.dst, weights=ew, minlength=p)
+    inter = (cs.src // n) != (cs.dst // n)
+    s_inter = np.bincount(cs.src[inter], minlength=p) > 0
+    r_inter = np.bincount(cs.dst[inter], minlength=p) > 0
+    N = p // n
+    node_out = np.bincount(cs.src[inter] // n, weights=ew[inter], minlength=N)
+    node_in = np.bincount(cs.dst[inter] // n, weights=ew[inter], minlength=N)
+    node_msgs = np.maximum(
+        np.bincount(cs.src[inter] // n, minlength=N),
+        np.bincount(cs.dst[inter] // n, minlength=N),
+    )
+    best, best_t = mults[0], None
+    for m in mults:
+        L = max(m * k, 1)
+        C = colors_lb(L)
+        cols_s = np.maximum(-(-ms // L), 1)
+        cols_r = np.maximum(-(-mr // L), 1)
+        t_s = port_time(
+            cost, bytes_s / cols_s, np.minimum(ms, L), s_inter, klanes,
+            ported=ported,
+        )
+        t_r = port_time(
+            cost, bytes_r / cols_r, np.minimum(mr, L), r_inter, klanes,
+            ported=ported, alpha_batches=False,
+        )
+        t_row = max(
+            float(np.where(ms > 0, t_s, 0.0).max()),
+            float(np.where(mr > 0, t_r, 0.0).max()),
+        )
+        if node_msgs.any():
+            t_n = lane_time(
+                cost,
+                np.maximum(node_out, node_in) / C,
+                np.maximum(node_msgs // C, 1),
+                klanes,
+            )
+            t_row = max(t_row, float(np.where(node_msgs > 0, t_n, 0.0).max()))
+        t_est = C * t_row
+        if best_t is None or t_est < best_t - 1e-12 * max(1.0, abs(best_t)):
+            best, best_t = m, t_est
+    return best, max(best * k, 1)
+
+
 class ColorRounds:
     """Conflict-graph coloring round packer: DSATUR-style greedy coloring at
     **message** granularity (ISSUE 4 tentpole).
@@ -346,16 +559,49 @@ class ColorRounds:
       lift, so the packer cannot hoist a part ahead of its payload's
       producer).
 
-    Coloring order is the DSATUR recipe adapted to capacities: the packer
-    fills one color at a time, always extending with the most
-    port-contended ready messages (static saturation proxy: the number of
-    messages competing for either endpoint's port; messages repeatedly
-    displaced by full colors are retried first by construction).  Unlike
-    the round-granularity list scheduler this can split an original round
-    apart — e.g. pull a broadcast tree's root-side sends of *later* waves
-    into the first color, or start a wave's independent subtrees before a
-    sibling subtree unblocks — which is exactly where first-fit leaves
-    rounds on the table.
+    Coloring order is the DSATUR recipe adapted to capacities, batched
+    (ISSUE 5 tentpole rewrite): colors are filled in **64-color windows**
+    whose per-(processor, side) state is packed ``uint64`` bitsets — one
+    bit per window color for "at port capacity", "has off-node (A)
+    traffic", and "has intra-priced on-node (C) traffic".  Every batch
+    iteration assigns *many colors at once*: each dependency-ready
+    candidate's forbidden-color set is a handful of bitwise ORs over the
+    bitsets of its two endpoints, its target color is the lowest clear bit
+    at or above its per-sender chunk slot (position in the sender's
+    priority queue divided by the budget — exactly where sequential
+    per-color filling would land it), and per-(endpoint, color) conflicts
+    are resolved by priority rank in one sort.  The per-color Python loop
+    of the PR 4 packer (one iteration per emitted round, intractable
+    wall-clock at the ~1.3M messages a paper-scale alltoall compiles to)
+    becomes a loop over 64-color windows with a few batch iterations each;
+    there is no per-message Python anywhere.
+
+    **Memory bound**: the windowing is what keeps the bitsets linear — a
+    full conflict-graph adjacency for an O(p^2)-message alltoall would be
+    ``p^2 msgs x p^2/64`` uint64 words (the naive DSATUR bitset layout,
+    ~2e10 words at p=1152), and even per-message forbidden sets over all
+    R colors would be ``M x R/64`` words.  The window holds one uint64 per
+    (processor, side, state-kind) plus a ``[p, 64]`` count grid, i.e.
+    O(p) — candidates carry one transient uint64 each.  If the packing
+    degenerates anyway (pathological inputs), the pass still terminates —
+    each window advances monotonically — and the lex race in
+    ``OPT_MODES``/OPT3 simply rejects the result, falling back to the
+    first-fit ``ReorderRounds`` baseline.
+
+    With ``machine=`` the packer is additionally **tree-aware** (ISSUE 5):
+    in the bandwidth regime (a single message's serialized bytes cost more
+    than a message latency, ``beta * max_msg_elems > alpha``) eager
+    packing would concentrate a broadcast root's per-round bytes into few
+    colors and pay more in serialized port bytes than it saves in alphas —
+    exactly where PR 4's packer lost the race on kported/fulllane bcast.
+    The tree-aware objective caps each (processor, side)'s messages per
+    color so its per-color bytes cannot exceed its densest *input* round
+    (never below one message), de-prioritizing root-byte concentration
+    while leaving the alpha-regime packing depth untouched.
+
+    ``mult=None`` delegates the budget rung to
+    :func:`choose_color_budget` (cost-aware with ``machine=``, structural
+    otherwise).
 
     The result is not a pure round union of its input, so — unlike
     ``ReorderRounds``/``CompactRounds`` — it is *not* provably never
@@ -369,13 +615,74 @@ class ColorRounds:
         limit: int | None = None,
         *,
         procs_per_node: int,
-        mult: int = 1,
+        mult: int | None = 1,
+        machine: Machine | None = None,
+        ported: bool = False,
     ):
         self.limit = limit
         self.mult = mult
         self.procs_per_node = procs_per_node
-        lim = f"{mult}k" if limit is None else str(limit)
-        self.name = f"color_rounds[limit={lim},n={procs_per_node}]"
+        self.machine = machine
+        self.ported = ported
+        # payload-independent (recipe-cacheable) unless the machine-costed
+        # tree-aware caps / budget chooser read message sizes
+        self.recipe_safe = machine is None
+        if limit is not None:
+            lim = str(limit)
+        elif mult is None:
+            lim = "auto"
+        else:
+            lim = f"{mult}k"
+        # machine-costed runs encode the port model too: the chooser and
+        # caps price with it, so two port models are two distinct rewrites
+        # (pipeline_fingerprint hashes names — they must not collide)
+        cost = (
+            f",cost,{'ported' if ported else '1ported'}"
+            if machine is not None
+            else ""
+        )
+        self.name = f"color_rounds[limit={lim},n={procs_per_node}{cost}]"
+
+    def _side_caps(
+        self, cs: CompiledSchedule, limit: int, pool: np.ndarray,
+        qptr: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-(processor, side) per-color message caps.  Default: the port
+        budget.  Tree-aware mode (machine given, bandwidth regime): also
+        capped so one color's bytes at that endpoint cannot exceed the
+        endpoint's densest input round (floored at one message)."""
+        p = cs.p
+        lim_s = np.full(p, limit, dtype=np.int64)
+        lim_r = np.full(p, limit, dtype=np.int64)
+        if self.machine is None or cs.num_msgs == 0:
+            return lim_s, lim_r
+        cost = self.machine.cost
+        max_msg = float(cs.elems.max())
+        if cost.beta_inter * max_msg <= cost.alpha_inter:
+            return lim_s, lim_r  # alpha regime: concentration is free
+        st = cs.stats(self.procs_per_node)
+        ew = cs.elems.astype(np.float64)
+        # densest single message per sender (pool is src-sorted) / receiver
+        mx_s = np.zeros(p)
+        nz = np.flatnonzero(np.diff(qptr))
+        if nz.size:
+            mx_s[nz] = np.maximum.reduceat(ew[pool], qptr[:-1][nz])
+        rorder = np.argsort(cs.dst, kind="stable")
+        rptr = np.zeros(p + 1, dtype=np.int64)
+        np.cumsum(np.bincount(cs.dst, minlength=p), out=rptr[1:])
+        mx_r = np.zeros(p)
+        nz = np.flatnonzero(np.diff(rptr))
+        if nz.size:
+            mx_r[nz] = np.maximum.reduceat(ew[rorder], rptr[:-1][nz])
+        cap_s = np.floor_divide(
+            st.send_elems.max(axis=0), np.maximum(mx_s, 1.0)
+        ).astype(np.int64)
+        cap_r = np.floor_divide(
+            st.recv_elems.max(axis=0), np.maximum(mx_r, 1.0)
+        ).astype(np.int64)
+        lim_s = np.clip(cap_s, 1, limit)
+        lim_r = np.clip(cap_r, 1, limit)
+        return lim_s, lim_r
 
     def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
         if not cs.has_blocks:
@@ -389,9 +696,6 @@ class ColorRounds:
             raise ValueError(f"p={p} not divisible by procs_per_node={n}")
         if R <= 1 or M == 0:
             return cs
-        limit = max(
-            self.limit if self.limit is not None else self.mult * cs.k, 1
-        )
 
         # --- causality DAG + transpose (provider -> dependents) -----------
         dep_ptr, dep_ids = block_dependencies(cs)
@@ -400,6 +704,19 @@ class ColorRounds:
         t_ids = dep_req[np.argsort(dep_ids, kind="stable")]
         t_ptr = np.zeros(M + 1, dtype=np.int64)
         np.cumsum(np.bincount(dep_ids, minlength=M), out=t_ptr[1:])
+
+        if self.limit is not None:
+            limit = max(self.limit, 1)
+        elif self.mult is None:
+            _, limit = choose_color_budget(
+                cs,
+                procs_per_node=n,
+                machine=self.machine,
+                ported=self.ported,
+                dep_csr=(dep_ptr, dep_ids),
+            )
+        else:
+            limit = max(self.mult * cs.k, 1)
 
         # --- per-side traffic categories for the class-purity test --------
         # A (=2): off-node; C (=0): on-node, intra-priced in the input
@@ -426,96 +743,200 @@ class ColorRounds:
             + np.bincount(cs.dst, minlength=p)[cs.dst]
         )
         prank = np.empty(M, dtype=np.int64)
-        prank[np.lexsort((np.arange(M), -deg))] = np.arange(M, dtype=np.int64)
+        prank[np.argsort(-deg, kind="stable")] = np.arange(M, dtype=np.int64)
 
-        # per-sender queues in priority order (CSR over src)
-        pool = np.lexsort((prank, cs.src))
+        # per-sender queues in priority order (CSR over src) — one fused-key
+        # argsort (prank is a permutation, so the key is collision-free)
+        pool = np.argsort(cs.src * np.int64(M) + prank)
         qptr = np.zeros(p + 1, dtype=np.int64)
         np.cumsum(np.bincount(cs.src, minlength=p), out=qptr[1:])
         head = qptr[:-1].copy()
         qend = qptr[1:]
 
+        lim_s, lim_r = self._side_caps(cs, limit, pool, qptr)
+        span_cap = lim_s * 64  # max placeable per sender per window
+
         color_of = np.full(M, -1, dtype=np.int64)
+        floor = np.zeros(M, dtype=np.int64)  # min color from providers
         done = np.zeros(M, dtype=bool)
         uncolored = M
-        g = 0
+        base = 0  # first color of the current 64-color window
         while uncolored:
-            # advance queue heads past messages colored out of order
-            while True:
-                live = head < qend
-                adv = live & done[pool[np.where(live, head, 0)]]
-                if not adv.any():
-                    break
-                head[adv] += 1
-            # candidate window: the next <= limit queue entries per sender
-            # (send capacity holds by construction), dependency-ready only
-            sizes = np.clip(qend - head, 0, limit)
-            take = np.empty(0, dtype=np.int64)
-            if int(sizes.sum()):
-                wmsg = pool[np.repeat(head, sizes) + segmented_arange(sizes)]
-                cand = wmsg[(~done[wmsg]) & (remaining[wmsg] == 0)]
-                if cand.size:
-                    cand = cand[np.argsort(prank[cand], kind="stable")]
-                    csrc, cdst = cs.src[cand], cs.dst[cand]
-                    cas, car = cat_s[cand], cat_r[cand]
-                    # class purity: off-node (A) and intra-priced on-node
-                    # (C) traffic may not share an endpoint in one color;
-                    # the highest-priority candidate at each endpoint
-                    # decides which side survives (reversed scatter leaves
-                    # the first write standing — the global top candidate
-                    # always survives, so every color takes a message)
-                    first_s = np.full(p, -1, dtype=np.int8)
-                    first_r = np.full(p, -1, dtype=np.int8)
-                    first_s[csrc[::-1]] = cas[::-1]
-                    first_r[cdst[::-1]] = car[::-1]
-                    has_a_s = np.zeros(p, dtype=bool)
-                    has_a_r = np.zeros(p, dtype=bool)
-                    has_a_s[csrc[cas == 2]] = True
-                    has_a_r[cdst[car == 2]] = True
-                    drop_c_s = has_a_s & (first_s != 0)
-                    drop_c_r = has_a_r & (first_r != 0)
-                    drop_a_s = first_s == 0
-                    drop_a_r = first_r == 0
-                    pure = ~(
-                        ((cas == 0) & drop_c_s[csrc])
-                        | ((cas == 2) & drop_a_s[csrc])
-                        | ((car == 0) & drop_c_r[cdst])
-                        | ((car == 2) & drop_a_r[cdst])
+            # --- fresh window state: packed uint64 bitsets per (proc, side)
+            s_cnt = np.zeros((p, 64), dtype=np.int32)
+            r_cnt = np.zeros((p, 64), dtype=np.int32)
+            full_s = np.zeros(p, dtype=np.uint64)  # at-capacity colors
+            full_r = np.zeros(p, dtype=np.uint64)
+            hasA_s = np.zeros(p, dtype=np.uint64)  # off-node traffic colors
+            hasA_r = np.zeros(p, dtype=np.uint64)
+            hasC_s = np.zeros(p, dtype=np.uint64)  # intra-priced colors
+            hasC_r = np.zeros(p, dtype=np.uint64)
+            # advance queue heads to each sender's first uncolored entry —
+            # one cumulative sum + searchsorted per *window*, then build the
+            # window's candidate pool once: per sender, the queue prefix the
+            # window's colors can hold.  Dependency-blocked entries stay in
+            # the pool (they may become ready mid-window); batch iterations
+            # below only ever shrink it.
+            pre = np.zeros(M + 1, dtype=np.int64)
+            np.cumsum(~done[pool], out=pre[1:])
+            head = np.minimum(np.searchsorted(pre, pre[head] + 1) - 1, qend)
+            sizes = np.minimum(qend - head, span_cap)
+            W = pool[np.repeat(head, sizes) + segmented_arange(sizes)]
+            W = W[~done[W]]
+            wlive = np.ones(W.size, dtype=bool)  # uncolored, not deferred
+            wtry = np.full(W.size, -1, dtype=np.int64)  # last tried color
+            while uncolored:
+                # ~done guards entries colored through the escape path
+                ok = wlive & (~done[W]) & (remaining[W] == 0)
+                ok_idx = np.flatnonzero(ok)
+                cand = W[ok_idx]
+                escape = False
+                if not cand.size:
+                    if not bool((wlive & ~done[W]).any()):
+                        break  # pool fully consumed: advance the window
+                    ready = np.flatnonzero((~done) & (remaining == 0))
+                    if not ready.size:
+                        raise AssertionError(
+                            "ColorRounds: unfinished coloring with no ready "
+                            "message — cyclic block dependencies (invalid "
+                            "input)"
+                        )
+                    # the pool holds only dependency-blocked entries but
+                    # ready work hides beyond a blocked sender prefix
+                    # (rare): feed the top-priority ready message through
+                    # the same batched machinery to unjam the pool
+                    cand = ready[[int(np.argmin(prank[ready]))]]
+                    escape = True
+                csrc, cdst = cs.src[cand], cs.dst[cand]
+                cas, car = cat_s[cand], cat_r[cand]
+                # tentative chunk slot on first consideration: position
+                # among the sender's pending candidates (cand is
+                # sender-major in priority order) plus its already-placed
+                # window load, divided by its cap — where sequential
+                # per-color filling would land it.  Retries resume
+                # *next-fit* from the color they last lost (class/capacity
+                # losers bump minimally instead of herding or skipping
+                # refillable slots).
+                runs = np.ones(cand.size, dtype=bool)
+                runs[1:] = csrc[1:] != csrc[:-1]
+                gstart = np.maximum.accumulate(
+                    np.where(runs, np.arange(cand.size), 0)
+                )
+                pos = np.arange(cand.size) - gstart
+                used = s_cnt.sum(axis=1, dtype=np.int64)
+                lo = (used[csrc] + pos) // lim_s[csrc]
+                if not escape:
+                    last = wtry[ok_idx]
+                    lo = np.where(last < 0, lo, last + 1)
+                lo = np.maximum(lo, floor[cand] - base)
+                # forbidden colors: packed bitset adjacency — port-full
+                # colors at either endpoint, class-purity conflicts, and
+                # everything below the chunk/causality floor
+                defer = lo >= 64
+                lo_c = np.clip(lo, 0, 63).astype(np.uint64)
+                forbid = (_BIT_LOW[lo_c] | full_s[csrc] | full_r[cdst])
+                forbid |= np.where(cas == 0, hasA_s[csrc], _U0)
+                forbid |= np.where(cas == 2, hasC_s[csrc], _U0)
+                forbid |= np.where(car == 0, hasA_r[cdst], _U0)
+                forbid |= np.where(car == 2, hasC_r[cdst], _U0)
+                forbid = np.where(defer, _UALL, forbid)
+                free = ~forbid
+                alive = free != _U0
+                if not escape:
+                    # window exhausted for these candidates: out of the
+                    # pool until the next window
+                    wlive[ok_idx[~alive]] = False
+                if not alive.any():
+                    if escape:
+                        break  # not even the escape fits: advance window
+                    continue  # deferred some; recheck what remains
+                widx = ok_idx[alive] if not escape else None
+                cand, csrc, cdst = cand[alive], csrc[alive], cdst[alive]
+                cas, car = cas[alive], car[alive]
+                crel = _ctz64(free[alive])
+                if widx is not None:
+                    wtry[widx] = crel  # losers resume next-fit from here
+                pr = prank[cand]
+                # one fused-key sort per endpoint side serves both the
+                # class-purity and the capacity selection
+                sides = []
+                for procs, cats in ((csrc, cas), (cdst, car)):
+                    sides.append(
+                        (procs, cats, *_side_groups(procs * 64 + crel, pr))
                     )
-                    cand, cdst = cand[pure], cdst[pure]
-                if cand.size:
-                    # receive capacity: first `limit` takers per receiver
-                    # in priority order
-                    o2 = np.argsort(cdst, kind="stable")
-                    sd = cdst[o2]
-                    newgrp = np.ones(sd.size, dtype=bool)
-                    newgrp[1:] = sd[1:] != sd[:-1]
-                    gstart = np.maximum.accumulate(
-                        np.where(newgrp, np.arange(sd.size), 0)
-                    )
-                    keep = np.zeros(cand.size, dtype=bool)
-                    keep[o2] = (np.arange(sd.size) - gstart) < limit
-                    take = cand[keep]
-            if not take.size:
-                # every queue head is dependency-blocked but ready work may
-                # hide behind one: take the highest-priority ready message
-                # (rare; keeps the coloring deadlock-free)
-                ready = np.flatnonzero((~done) & (remaining == 0))
-                if not ready.size:
-                    raise AssertionError(
-                        "ColorRounds: unfinished coloring with no ready "
-                        "message — cyclic block dependencies (invalid input)"
-                    )
-                take = ready[[int(np.argmin(prank[ready]))]]
-            done[take] = True
-            color_of[take] = g
-            uncolored -= int(take.size)
-            rep = t_ptr[take + 1] - t_ptr[take]
-            if int(rep.sum()):  # release dependents of just-colored providers
-                hit = np.repeat(t_ptr[take], rep) + segmented_arange(rep)
-                np.subtract.at(remaining, t_ids[hit], 1)
-            g += 1
+                # class purity inside this batch: per (endpoint, color)
+                # group the highest-priority candidate decides which of
+                # A/C survives (B mixes with both)
+                sel = np.ones(cand.size, dtype=bool)
+                for procs, cats, order, firsts, start_idx, gid_ord in sides:
+                    cats_ord = cats[order]
+                    first_cat = cats_ord[start_idx]
+                    hasA = (np.bincount(gid_ord, cats_ord == 2) > 0)[gid_ord]
+                    drop = (
+                        (cats_ord == 0) & hasA & (first_cat != 0)
+                    ) | ((cats_ord == 2) & (first_cat == 0))
+                    sel[order[drop]] = False
+                # capacity: top surviving takers per (endpoint, color) in
+                # priority order, sender side first (mirrors the
+                # sequential packer); survivor rank via a prefix sum over
+                # the already-sorted groups
+                for (procs, cats, order, firsts, start_idx, _), cnt, lim in (
+                    (sides[0], s_cnt, lim_s), (sides[1], r_cnt, lim_r),
+                ):
+                    k_ord = sel[order].astype(np.int64)
+                    ex = np.cumsum(k_ord) - k_ord  # survivors before elem
+                    surv = ex - ex[start_idx]
+                    po, co = procs[order], crel[order]
+                    bad = (k_ord != 0) & (surv >= (lim[po] - cnt[po, co]))
+                    sel[order[bad]] = False
+                tsel = np.flatnonzero(sel)
+                if not tsel.size:
+                    # guaranteed progress: the top-priority live candidate
+                    # alone is always legal at its free color
+                    tsel = np.array([int(np.argmin(pr))], dtype=np.int64)
+                take, tcrel = cand[tsel], crel[tsel]
+                tsrc, tdst = csrc[tsel], cdst[tsel]
+                done[take] = True
+                if widx is not None:
+                    wlive[widx[tsel]] = False
+                col = base + tcrel
+                color_of[take] = col
+                uncolored -= int(take.size)
+                # --- update window state: counts, then OR the new bits
+                # straight into the packed bitsets (counts only grow and
+                # caps are static, so a full/class bit never clears)
+                s_cnt += np.bincount(
+                    tsrc * 64 + tcrel, minlength=p * 64
+                ).reshape(p, 64).astype(np.int32)
+                r_cnt += np.bincount(
+                    tdst * 64 + tcrel, minlength=p * 64
+                ).reshape(p, 64).astype(np.int32)
+                fs = s_cnt[tsrc, tcrel] >= lim_s[tsrc]
+                np.bitwise_or.at(full_s, tsrc[fs], _BITW[tcrel[fs]])
+                fr = r_cnt[tdst, tcrel] >= lim_r[tdst]
+                np.bitwise_or.at(full_r, tdst[fr], _BITW[tcrel[fr]])
+                tcs, tcr = cat_s[take], cat_r[take]
+                np.bitwise_or.at(
+                    hasA_s, tsrc[tcs == 2], _BITW[tcrel[tcs == 2]]
+                )
+                np.bitwise_or.at(
+                    hasC_s, tsrc[tcs == 0], _BITW[tcrel[tcs == 0]]
+                )
+                np.bitwise_or.at(
+                    hasA_r, tdst[tcr == 2], _BITW[tcrel[tcr == 2]]
+                )
+                np.bitwise_or.at(
+                    hasC_r, tdst[tcr == 0], _BITW[tcrel[tcr == 0]]
+                )
+                rep = t_ptr[take + 1] - t_ptr[take]
+                if int(rep.sum()):  # release dependents of new providers
+                    hit = np.repeat(t_ptr[take], rep) + segmented_arange(rep)
+                    dmsg = t_ids[hit]
+                    remaining -= np.bincount(dmsg, minlength=M)
+                    np.maximum.at(floor, dmsg, np.repeat(col, rep) + 1)
+            base += 64
 
+        g = int(color_of.max()) + 1
         if g == R and bool((color_of == cs.round_ids()).all()):
             return cs  # coloring reproduced the input rounds
         morder = np.argsort(color_of, kind="stable")
@@ -547,6 +968,8 @@ class CompactRounds:
     it depends on; the pass consults the IR block arrays and refuses such
     merges.  Requires block metadata (``cs.has_blocks``).
     """
+
+    recipe_safe = True  # payload-independent round_ptr rewrite
 
     def __init__(self, limit: int | None = None):
         self.limit = limit
@@ -662,6 +1085,10 @@ class SplitPayloads:
     bloat the lex policy must then reject wholesale.
     """
 
+    #: split factors clamp to ``elems`` (and the costed mode prices bytes),
+    #: so the rewrite is payload-dependent: never recipe-cacheable.
+    recipe_safe = False
+
     def __init__(
         self,
         parts: int | None = None,
@@ -734,6 +1161,9 @@ class CoalesceMessages:
     term."""
 
     name = "coalesce_messages"
+    #: payload-independent, but fuses messages (sums elems), so the
+    #: tagged-elems recipe trick cannot replay it: not recipe-cacheable.
+    recipe_safe = False
 
     def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
         return merge_messages(cs)
@@ -790,6 +1220,16 @@ class PassManager:
     records ``oracle_ok=False`` — the pipeline degrades to a no-op instead
     of shipping a corrupt schedule.  Optimized schedules are machine-
     checked, never trusted.
+
+    With ``incremental=True`` (the default) a checked rewrite whose
+    :func:`repro.core.validate.rewrite_window` confines the diff to a small
+    round window (< half the block-hop events) is rechecked by the
+    *incremental* oracle — only the affected blocks' hop chains — instead
+    of a full O(E log E) replay.  The incremental verdict is only sound
+    against a valid input, so the manager full-validates the current
+    schedule once, lazily, before the first incremental use (and falls
+    back to full per-pass validation if that input check fails, preserving
+    the exact non-incremental semantics on garbage inputs).
     """
 
     def __init__(
@@ -803,6 +1243,7 @@ class PassManager:
         check: bool = False,
         fixpoint: bool = False,
         max_iters: int = 4,
+        incremental: bool = True,
     ):
         if policy not in ("always", "improved", "lex"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -816,6 +1257,7 @@ class PassManager:
         self.check = check
         self.fixpoint = fixpoint
         self.max_iters = max(int(max_iters), 1)
+        self.incremental = incremental
 
     def _time(self, cs: CompiledSchedule) -> float | None:
         if self.machine is None:
@@ -833,11 +1275,32 @@ class PassManager:
             return new.num_rounds < cur.num_rounds
         return new.num_msgs < cur.num_msgs
 
+    def _check(self, cs, new, prev_ok):
+        """Oracle-check a structurally-new rewrite; incremental when the
+        diff is window-confined and small and the input is known-valid.
+        Returns ``(report, prev_ok)`` (``prev_ok`` memoizes the lazy input
+        validation across passes: None = not yet checked)."""
+        if self.incremental and prev_ok is not False:
+            window = rewrite_window(cs, new)
+            if (
+                window is not None
+                and window_hop_fraction(cs, new, window) < 0.5
+            ):
+                if prev_ok is None:
+                    prev_ok = validate_schedule(cs).ok
+                if prev_ok:
+                    return (
+                        revalidate_schedule(new, prev=cs, window=window),
+                        prev_ok,
+                    )
+        return validate_schedule(new), prev_ok
+
     def run(
         self, cs: CompiledSchedule
     ) -> tuple[CompiledSchedule, list[PassRecord]]:
         records: list[PassRecord] = []
         t_cur = self._time(cs)
+        prev_ok: bool | None = None  # lazy input validity, for incremental
         sweeps = self.max_iters if self.fixpoint else 1
         for it in range(sweeps):
             progressed = False
@@ -847,7 +1310,7 @@ class PassManager:
                 changed = new is not cs
                 ok = None
                 if changed and (self.validate or self.check):
-                    report = validate_schedule(new)
+                    report, prev_ok = self._check(cs, new, prev_ok)
                     ok = report.ok
                     if not ok and not self.check:
                         report.raise_if_invalid()
@@ -883,6 +1346,8 @@ class PassManager:
                 if keep:
                     progressed = progressed or changed
                     cs, t_cur = new, t_new
+                    if ok:  # the kept rewrite was machine-checked valid
+                        prev_ok = True
             if not progressed:
                 break
         return cs, records
@@ -914,7 +1379,7 @@ def _color_pipeline(topo: Topology | None) -> list:
             "test requires procs_per_node); pass topo= or machine="
         )
     n = topo.procs_per_node
-    return [ColorRounds(limit=None, procs_per_node=n, mult=4)]
+    return [ColorRounds(limit=None, procs_per_node=n, mult=None)]
 
 
 #: optimize= knob values -> pass pipeline factory (called with the target
@@ -923,15 +1388,15 @@ def _color_pipeline(topo: Topology | None) -> list:
 #: scheduler (never slower by construction, so it is safe under
 #: policy="always"); "split" is the k-lane payload decomposition at the
 #: *topology's* lane count (neutral in the 1-ported model, a win in the
-#: k-ported one); "color" is the ISSUE 4 conflict-graph coloring packer at
-#: the 4k budget — the packing-depth sweet spot across the OPT3 cells (in
-#: the alpha-dominated regime deeper packing amortizes more per-round
-#: latencies against the same total beta cost, and 4k stays well below
-#: port over-subscription).  ColorRounds is not provably never-slower, so
+#: k-ported one); "color" is the conflict-graph coloring packer at the
+#: budget rung :func:`choose_color_budget` picks (ISSUE 5 — structural
+#: chooser here, since the selector pipeline carries no machine; this
+#: keeps the pipeline payload-independent and therefore recipe-cacheable
+#: across payload sizes).  ColorRounds is not provably never-slower, so
 #: the selector *races* opt: candidates built from it against their
 #: unoptimized bases rather than trusting them; the OPT3 benchmark table
-#: additionally runs the full lex ladder ({2k, 4k} budgets against the
-#: first-fit baseline) where every rung is evaluated before it lands.
+#: runs the cost-priced chooser (machine=) against the first-fit baseline
+#: under the lex policy, where the rung is evaluated before it lands.
 OPT_MODES: dict[str, Callable[[Topology | None], list]] = {
     "lane": lambda topo: [CompactRounds(limit=1)],
     "ported": lambda topo: [CompactRounds(limit=None)],

@@ -211,6 +211,13 @@ def affine_cost(
     return t_lo - slope * c_lo, slope
 
 
+#: relative slope disagreement between the two fitted segments above which
+#: ``piecewise_cost`` spends a fourth probe (adaptive placement): slopes
+#: that differ this much mean the regime knee sits somewhere inside a
+#: segment, and a single interior probe cannot say where.
+SLOPE_DISAGREEMENT = 0.25
+
+
 @functools.lru_cache(maxsize=4096)
 def piecewise_cost(
     op: str,
@@ -221,15 +228,24 @@ def piecewise_cost(
     procs_per_node: int = 256,
     k_lanes: int = 8,
 ) -> tuple[int, float, float, float, float] | None:
-    """3-probe piecewise-affine fit ``(c_mid, A1, B1, A2, B2)``.
+    """Piecewise-affine fit ``(c_mid, A1, B1, A2, B2)`` from 3-4 probes.
 
     Probes at ``c_lo``, the geometric midpoint, and ``c_hi``; segment 1
     (``A1 + B1*c``) covers ``c <= c_mid``, segment 2 the rest.  Exact at
     all three probes, so the two-segment fit catches a family whose
     dominating cost term flips somewhere inside the sweep — the ``opt:``
     rewrites and payload splitting do exactly that — where the 2-probe
-    affine fit would silently misprice the whole interior.  Returns None
-    if the family cannot be generated on this mesh.
+    affine fit would silently misprice the whole interior.
+
+    **Adaptive probe placement** (ISSUE 5 satellite): when the two
+    segments' slopes disagree by more than :data:`SLOPE_DISAGREEMENT`
+    (relative), the knee is real but its location is only bracketed to one
+    side of the midpoint; the fit then bisects once more — a fourth probe
+    at the geometric midpoint of the segment carrying more of the cost
+    variation (where the knee must live) — and keeps
+    the two-segment fit whose breakpoint explains the off-breakpoint probe
+    best (total probes capped at 4).  Returns None if the family cannot be
+    generated on this mesh.
     """
     t_lo = _sim_payload(op, alg, c_lo, num_nodes, procs_per_node, k_lanes)
     if t_lo is None:
@@ -249,6 +265,33 @@ def piecewise_cost(
         return None
     b1 = (t_mid - t_lo) / (c_mid - c_lo)
     b2 = (t_hi - t_mid) / (c_hi - c_mid)
+    disagree = abs(b2 - b1) > SLOPE_DISAGREEMENT * max(abs(b1), abs(b2), 1e-30)
+    if disagree:
+        # bisect (geometrically) the segment carrying more of the cost
+        # variation — the knee lives where the time actually moves
+        left = abs(t_mid - t_lo) > abs(t_hi - t_mid)
+        lo2, hi2 = (c_lo, c_mid) if left else (c_mid, c_hi)
+        c_x = int(round(math.sqrt(float(max(lo2, 1)) * float(hi2))))
+        c_x = min(max(c_x, lo2 + 1), hi2 - 1)
+        if lo2 < c_x < hi2:
+            t_x = _sim_payload(op, alg, c_x, num_nodes, procs_per_node, k_lanes)
+            if t_x is not None:
+                probes = sorted({c_lo: t_lo, c_mid: t_mid, c_hi: t_hi,
+                                 c_x: t_x}.items())
+                best, best_err = None, None
+                for kn in range(1, len(probes) - 1):
+                    ck, tk = probes[kn]
+                    s1 = (tk - probes[0][1]) / (ck - probes[0][0])
+                    s2 = (probes[-1][1] - tk) / (probes[-1][0] - ck)
+                    fit = (ck, probes[0][1] - s1 * probes[0][0], s1,
+                           tk - s2 * ck, s2)
+                    err = sum(
+                        abs(piecewise_eval(fit, cq) - tq)
+                        for cq, tq in probes[1:-1]
+                    )
+                    if best_err is None or err < best_err:
+                        best, best_err = fit, err
+                return best
     return c_mid, t_lo - b1 * c_lo, b1, t_mid - b2 * c_mid, b2
 
 

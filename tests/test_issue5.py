@@ -1,0 +1,475 @@
+"""ISSUE 5: the bitset conflict-coloring packer (windowed uint64 batch
+selection), the cost-aware budget chooser and tree-aware caps, the
+incremental data-flow oracle (``rewrite_window``/``revalidate_schedule``,
+pinned incremental == full on all four alltoall families and both machine
+models), the fingerprinted/recipe'd optimized-schedule cache (hit/miss,
+fingerprint invalidation, thread-safety smoke), the selector's adaptive
+fourth probe, and the bench gate's report-everything-in-one-run fix."""
+
+import dataclasses
+import json
+import sys
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import passes as P
+from repro.core import schedule_ir as IR
+from repro.core import selector
+from repro.core.passes import (
+    ColorRounds,
+    CompactRounds,
+    PassManager,
+    ReorderRounds,
+    SplitPayloads,
+    choose_color_budget,
+    pipeline_fingerprint,
+)
+from repro.core.simulate import simulate
+from repro.core.topology import (
+    Machine,
+    Topology,
+    hydra_machine,
+    nvlink_ib_machine,
+)
+from repro.core.validate import (
+    revalidate_schedule,
+    rewrite_window,
+    validate_schedule,
+    window_hop_fraction,
+)
+
+HYDRA = hydra_machine()
+NVLINK = nvlink_ib_machine()
+_A2A = ["kported", "bruck", "klane", "fulllane"]
+
+
+def _machine(topo, cost_src):
+    return Machine(topo=topo, cost=cost_src.cost)
+
+
+# ---------------------------------------------------------------------------
+# incremental oracle: rewrite_window + revalidate_schedule
+# ---------------------------------------------------------------------------
+
+
+def test_rewrite_window_identical_and_disjoint():
+    topo = Topology(3, 4, 2)
+    cs = IR.compiled_schedule("alltoall", "klane", topo, 2, 5)
+    assert rewrite_window(cs, cs) == (cs.num_rounds, cs.num_rounds,
+                                      cs.num_rounds)
+    # merging two interior rounds confines the window to exactly them
+    merged_ptr = np.delete(cs.round_ptr, 3)
+    new = dataclasses.replace(cs, round_ptr=merged_ptr, _stats={})
+    a, bp, bn = rewrite_window(cs, new)
+    assert (a, bp, bn) == (2, 4, 3)
+    assert window_hop_fraction(cs, new, (a, bp, bn)) < 0.5
+    other = IR.compiled_schedule("alltoall", "bruck", topo, 2, 5)
+    assert rewrite_window(
+        dataclasses.replace(cs, op="scatter"), cs
+    ) is None
+    assert rewrite_window(other, cs) is not None  # same op/p: diffable
+
+
+@pytest.mark.parametrize("alg", _A2A)
+@pytest.mark.parametrize("mach", ["hydra", "nvlink"])
+def test_incremental_equals_full_oracle(alg, mach):
+    """ISSUE 5 acceptance: incremental == full oracle verdict on every
+    window-confined rewrite of all four alltoall families, on both machine
+    models (the machine drives the cost-aware rewrites being checked)."""
+    topo = Topology(3, 4, 2)
+    machine = _machine(topo, HYDRA if mach == "hydra" else NVLINK)
+    base = IR.compiled_schedule("alltoall", alg, topo, 2, 5)
+    assert validate_schedule(base).ok
+    rng = np.random.default_rng(len(alg))
+    rewrites = [
+        CompactRounds(limit=None).apply(base),
+        ReorderRounds(limit=None, procs_per_node=4).apply(base),
+        ColorRounds(limit=None, procs_per_node=4, mult=4).apply(base),
+        ColorRounds(
+            limit=None, procs_per_node=4, mult=None,
+            machine=machine, ported=True,
+        ).apply(base),
+        SplitPayloads(machine=machine, ported=True).apply(base),
+        IR.split_messages(
+            base, rng.integers(1, 4, size=base.num_msgs)
+        ),
+    ]
+    for new in rewrites:
+        inc = revalidate_schedule(new, prev=base)
+        full = validate_schedule(new)
+        assert inc.ok and full.ok
+    # corrupt *inside* a window: merge the first two rounds, creating
+    # same-round forwarding on every dependency-chained family
+    bad = dataclasses.replace(
+        base, round_ptr=np.delete(base.round_ptr, 1), _stats={}
+    )
+    inc = revalidate_schedule(bad, prev=base)
+    full = validate_schedule(bad)
+    assert inc.ok == full.ok
+    if alg == "bruck":  # phases fully chained: the merge is illegal
+        assert not inc.ok
+
+
+def test_incremental_checks_only_affected_blocks():
+    """The subset report covers the affected chains only — fewer hops than
+    the full oracle — while agreeing on the verdict."""
+    topo = Topology(3, 4, 2)
+    base = IR.compiled_schedule("alltoall", "fulllane", topo, 2, 5)
+    merged_ptr = np.delete(base.round_ptr, 2)
+    new = dataclasses.replace(base, round_ptr=merged_ptr, _stats={})
+    inc = revalidate_schedule(new, prev=base)
+    full = validate_schedule(new)
+    assert inc.ok == full.ok
+    assert inc.num_block_hops < full.num_block_hops
+
+
+def test_passmanager_incremental_matches_full():
+    """The manager's incremental path (default) keeps exactly the rewrites
+    the full path keeps, with identical oracle verdicts."""
+    topo = Topology(3, 4, 2)
+    machine = _machine(topo, HYDRA)
+    base = IR.compiled_schedule("alltoall", "fulllane", topo, 2, 5)
+    pipeline = [
+        ReorderRounds(limit=None, procs_per_node=4),
+        SplitPayloads(machine=machine, ported=True),
+        CompactRounds(limit=None),
+    ]
+    opt_inc, rec_inc = PassManager(
+        pipeline, machine=machine, ported=True, policy="lex",
+        validate=True, incremental=True,
+    ).run(base)
+    opt_full, rec_full = PassManager(
+        pipeline, machine=machine, ported=True, policy="lex",
+        validate=True, incremental=False,
+    ).run(base)
+    assert [r.applied for r in rec_inc] == [r.applied for r in rec_full]
+    assert [r.oracle_ok for r in rec_inc] == [r.oracle_ok for r in rec_full]
+    assert opt_inc.num_rounds == opt_full.num_rounds
+    assert validate_schedule(opt_inc).ok
+
+
+def test_passmanager_check_reverts_corrupt_rewrite_incrementally():
+    """A corrupt rewrite whose diff is window-confined is caught by the
+    incremental oracle and reverted under check=True."""
+
+    class MergeFirstRounds:
+        name = "corrupt_merge"
+
+        def apply(self, cs):
+            return dataclasses.replace(
+                cs, round_ptr=np.delete(cs.round_ptr, 1), _stats={}
+            )
+
+    topo = Topology(3, 4, 2)
+    base = IR.compiled_schedule("alltoall", "bruck", topo, 2, 5)
+    pm = PassManager([MergeFirstRounds()], check=True, incremental=True)
+    out, records = pm.run(base)
+    assert out is base
+    assert records[0].oracle_ok is False and not records[0].applied
+
+
+# ---------------------------------------------------------------------------
+# budget chooser + tree-aware caps
+# ---------------------------------------------------------------------------
+
+
+def test_choose_color_budget_structural_prefers_deepest_useful():
+    topo = Topology(4, 6, 2)
+    cs = IR.compiled_schedule("alltoall", "klane", topo, 2, 7)
+    mult, limit = choose_color_budget(cs, procs_per_node=6)
+    assert (mult, limit) == (8, 16)  # every rung still shrinks the bound
+    col = ColorRounds(limit=None, procs_per_node=6, mult=None).apply(cs)
+    assert col.num_rounds == -(-18 // 16) + -(-5 // 16)
+    assert validate_schedule(col).ok
+
+
+def test_choose_color_budget_cost_priced_beats_fixed_ladder():
+    """Hydra, klane alltoall at c=1 (alpha regime): the chooser must pick a
+    rung at least as deep as PR 4's fixed 4k — packing to no more rounds,
+    no slower — without racing the ladder."""
+    topo = Topology(36, 32, 2)
+    cs = IR.compiled_schedule("alltoall", "klane", topo, 32, 1)
+    mult, limit = choose_color_budget(
+        cs, procs_per_node=32, machine=HYDRA, ported=False
+    )
+    assert limit >= 4 * cs.k
+    auto = ColorRounds(
+        limit=None, procs_per_node=32, mult=None,
+        machine=HYDRA, ported=False,
+    ).apply(cs)
+    fixed = ColorRounds(limit=None, procs_per_node=32, mult=4).apply(cs)
+    assert auto.num_rounds <= fixed.num_rounds
+    assert (
+        simulate(auto, HYDRA).time_us <= simulate(fixed, HYDRA).time_us + 1e-9
+    )
+    assert validate_schedule(auto).ok
+
+
+def test_tree_aware_caps_bandwidth_regime():
+    """kported/fulllane broadcast at c=1e6 (the families where PR 4's eager
+    coloring lost the race by concentrating root bytes): the tree-aware
+    caps must price-protect the packing — no slower than the uncapped
+    packer, and oracle-valid."""
+    topo = Topology(36, 32, 2)
+    for alg, k in (("kported", 6), ("fulllane", 6)):
+        base = IR.compiled_schedule("broadcast", alg, topo, k, 1_000_000)
+        nocap = ColorRounds(limit=None, procs_per_node=32, mult=4).apply(base)
+        cap = ColorRounds(
+            limit=None, procs_per_node=32, mult=4,
+            machine=HYDRA, ported=True,
+        ).apply(base)
+        assert validate_schedule(cap).ok
+        assert (
+            simulate(cap, HYDRA, ported=True).time_us
+            < simulate(nocap, HYDRA, ported=True).time_us
+        ), alg
+
+
+def test_tree_aware_caps_inactive_in_alpha_regime():
+    """At c=1 a message costs less than a latency: the caps must not
+    restrict packing (machine= output == machine-free output)."""
+    topo = Topology(36, 32, 2)
+    base = IR.compiled_schedule("alltoall", "klane", topo, 32, 1)
+    plain = ColorRounds(limit=None, procs_per_node=32, mult=4).apply(base)
+    costed = ColorRounds(
+        limit=None, procs_per_node=32, mult=4, machine=HYDRA, ported=False
+    ).apply(base)
+    assert costed.num_rounds == plain.num_rounds
+
+
+# ---------------------------------------------------------------------------
+# optimized-schedule cache: fingerprints, recipes, thread safety
+# ---------------------------------------------------------------------------
+
+
+def test_opt_cache_hit_miss_across_modes():
+    IR.schedule_cache_clear()
+    topo = Topology(4, 6, 2)
+    a = IR.compiled_schedule("alltoall", "klane", topo, 2, 7,
+                             optimize="color")
+    b = IR.compiled_schedule("alltoall", "klane", topo, 2, 7,
+                             optimize="reorder")
+    plain = IR.compiled_schedule("alltoall", "klane", topo, 2, 7)
+    assert a is not b and a is not plain
+    # repeats hit, per mode
+    before = IR.schedule_cache_info()
+    assert IR.compiled_schedule(
+        "alltoall", "klane", topo, 2, 7, optimize="color"
+    ) is a
+    assert IR.compiled_schedule(
+        "alltoall", "klane", topo, 2, 7, optimize="reorder"
+    ) is b
+    after = IR.schedule_cache_info()
+    assert after["hits"] == before["hits"] + 2
+    assert after["misses"] == before["misses"]
+
+
+def test_opt_cache_recipe_replays_across_payloads():
+    """The tentpole payoff: a payload-independent opt pipeline runs once;
+    other payload sizes replay the recorded recipe (one gather) and match
+    the directly-optimized schedule exactly."""
+    IR.schedule_cache_clear()
+    topo = Topology(4, 6, 2)
+    a = IR.compiled_schedule("alltoall", "klane", topo, 2, 7,
+                             optimize="color")
+    info1 = IR.schedule_cache_info()
+    assert info1["recipe_misses"] == 1
+    b = IR.compiled_schedule("alltoall", "klane", topo, 2, 869,
+                             optimize="color")
+    info2 = IR.schedule_cache_info()
+    assert info2["recipe_hits"] == 1  # pipeline did NOT run again
+    assert b.num_rounds == a.num_rounds
+    # recipe replay == running the pipeline directly on the c=869 base
+    base = IR.compiled_schedule("alltoall", "klane", topo, 2, 869)
+    direct, _ = P.optimize_schedule(base, "color", topo=topo)
+    for f in ("src", "dst", "elems", "round_ptr", "blk_ptr", "blk_ids"):
+        assert np.array_equal(getattr(b, f), getattr(direct, f)), f
+    assert validate_schedule(b).ok
+
+
+def test_opt_cache_fingerprint_invalidation(monkeypatch):
+    IR.schedule_cache_clear()
+    topo = Topology(4, 6, 2)
+    a = IR.compiled_schedule("alltoall", "klane", topo, 2, 7,
+                             optimize="color")
+    monkeypatch.setattr(P, "PASS_PIPELINE_VERSION", "test-bump")
+    b = IR.compiled_schedule("alltoall", "klane", topo, 2, 7,
+                             optimize="color")
+    assert b is not a  # stale entry not served under the new fingerprint
+    assert b.num_rounds == a.num_rounds
+    assert IR.schedule_cache_info()["recipe_misses"] >= 2
+
+
+def test_pipeline_fingerprint_covers_names_and_version(monkeypatch):
+    p1 = [ReorderRounds(limit=None, procs_per_node=4)]
+    p2 = [ReorderRounds(limit=2, procs_per_node=4)]
+    assert pipeline_fingerprint(p1) != pipeline_fingerprint(p2)
+    f1 = pipeline_fingerprint(p1)
+    monkeypatch.setattr(P, "PASS_PIPELINE_VERSION", "test-bump")
+    assert pipeline_fingerprint(p1) != f1
+
+
+def test_opt_cache_thread_smoke():
+    """Concurrent compiled_schedule(optimize=) calls: no corruption, every
+    result oracle-valid and structurally identical per payload."""
+    IR.schedule_cache_clear()
+    topo = Topology(4, 6, 2)
+
+    def work(c):
+        return c, IR.compiled_schedule(
+            "alltoall", "klane", topo, 2, c, optimize="color"
+        )
+
+    payloads = [3, 5, 7, 11] * 6
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        results = list(ex.map(work, payloads))
+    by_c = {}
+    for c, cs in results:
+        ref = by_c.setdefault(c, cs)
+        assert cs.num_rounds == ref.num_rounds
+        assert np.array_equal(cs.round_ptr, ref.round_ptr)
+    assert validate_schedule(by_c[3]).ok
+    info = IR.schedule_cache_info()
+    assert info["recipes"] == 1  # one structure recipe serves every payload
+
+
+# ---------------------------------------------------------------------------
+# selector: adaptive fourth probe
+# ---------------------------------------------------------------------------
+
+
+def _knee_cost(c, knee=1 << 18, slope=0.01, floor=1000.0):
+    return floor + max(0, c - knee) * slope
+
+
+def test_adaptive_probe_fixes_mid_sweep_regime_flip(monkeypatch):
+    """A family flat until a knee deep inside the second segment: the
+    3-probe fit overprices the interior by thousands of us and misranks it
+    against a constant-cost competitor; the adaptive fourth probe (capped
+    at 4) lands near the knee and fixes the ranking."""
+    def fake_sim(op, alg, payload, num_nodes, procs_per_node, k_lanes):
+        if alg == "kneel":
+            return _knee_cost(payload)
+        return 4000.0  # constant competitor
+
+    monkeypatch.setattr(selector, "_sim_payload", fake_sim)
+    selector.piecewise_cost.cache_clear()
+    try:
+        mesh = (4, 8, 2)
+        c_lo, c_hi = 1 << 4, 1 << 24
+        fit = selector.piecewise_cost("alltoall", "kneel", c_lo, c_hi, *mesh)
+        flat = selector.piecewise_cost("alltoall", "flat", c_lo, c_hi, *mesh)
+        probe = 1 << 19  # interior, past the knee
+        true_knee = _knee_cost(probe)
+        est = selector.piecewise_eval(fit, probe)
+        # the forced 3-probe fit (PR 3 behaviour) misranks here
+        c_mid = 1 << 14
+        b2 = (_knee_cost(c_hi) - _knee_cost(c_mid)) / (c_hi - c_mid)
+        est3 = _knee_cost(c_mid) + b2 * (probe - c_mid)
+        assert est3 > 4000.0 > true_knee  # 3 probes: wrong side of the flip
+        assert abs(est - true_knee) < abs(est3 - true_knee)
+        assert est < selector.piecewise_eval(flat, probe)  # ranks right
+    finally:
+        selector.piecewise_cost.cache_clear()
+
+
+def test_adaptive_probe_not_spent_on_agreeing_slopes(monkeypatch):
+    calls = []
+
+    def fake_sim(op, alg, payload, num_nodes, procs_per_node, k_lanes):
+        calls.append(payload)
+        return 10.0 + 0.5 * payload  # one affine regime
+
+    monkeypatch.setattr(selector, "_sim_payload", fake_sim)
+    selector.piecewise_cost.cache_clear()
+    try:
+        fit = selector.piecewise_cost("alltoall", "aff", 16, 1 << 20, 4, 8, 2)
+        assert len(calls) == 3  # no fourth probe
+        assert selector.piecewise_eval(fit, 12345) == pytest.approx(
+            10.0 + 0.5 * 12345
+        )
+    finally:
+        selector.piecewise_cost.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# bench gate: every problem reported in one run
+# ---------------------------------------------------------------------------
+
+sys.path.insert(0, "tools")
+import bench_gate  # noqa: E402
+
+
+def _dump(path, cells):
+    path.write_text(json.dumps({"cells": cells}))
+
+
+def test_bench_gate_reports_all_failures_in_one_run(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    _dump(base, [
+        {"table": "T", "impl": "a", "k": 1, "c": 1, "sim_us": 100.0},
+        {"table": "T", "impl": "b", "k": 1, "c": 1, "sim_us": 100.0},
+        {"table": "T", "impl": "gone", "k": 1, "c": 1, "sim_us": 100.0},
+    ])
+    _dump(fresh, [
+        {"table": "T", "impl": "a", "k": 1, "c": 1, "sim_us": 200.0},
+        {"table": "T", "impl": "b", "k": 1, "c": 1, "sim_us": 150.0},
+        {"table": "T", "impl": "broken", "k": 1, "c": 1},  # no sim_us
+    ])
+    rc = bench_gate.main([str(fresh), "--baseline", str(base)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert out.count("FAIL") >= 4  # 2 regressions + 1 disappeared + 1 bad
+    assert "impl': 'a'" in out or "'a'" in out
+    assert "'b'" in out and "'gone'" in out and "malformed" in out
+
+
+def test_bench_gate_refuses_to_bless_malformed(tmp_path, capsys):
+    fresh = tmp_path / "fresh.json"
+    base = tmp_path / "base.json"
+    _dump(fresh, [
+        {"table": "T", "impl": "a", "k": 1, "c": 1, "sim_us": 1.0},
+        {"table": "T", "impl": "bad", "k": 1},
+    ])
+    rc = bench_gate.main(
+        [str(fresh), "--baseline", str(base), "--update-baseline"]
+    )
+    assert rc == 1
+    assert not base.exists()
+    assert "will not bless" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# paper-opt smoke wiring
+# ---------------------------------------------------------------------------
+
+
+def test_paper_opt_smoke_wiring():
+    """The CI smoke is wired: run.py accepts --only paper-opt, and the
+    smoke table targets a p=1152 alltoall with its own (ungated) table
+    name shared with no blessed cell."""
+    import argparse
+    import benchmarks.run as br
+    from benchmarks.paper_tables import OPT3_CASES, table_paper_opt_smoke
+
+    assert any(
+        op == "alltoall" and alg in ("fulllane", "kported")
+        for _, op, alg, _, _, _ in OPT3_CASES
+    )
+    assert table_paper_opt_smoke.__doc__
+    # argparse accepts the new selection without running it
+    old_argv = sys.argv
+    try:
+        sys.argv = ["run.py", "--only", "paper-opt"]
+        ap = argparse.ArgumentParser()
+        ap.add_argument(
+            "--only",
+            choices=["paper", "paper-opt", "tpu", "hlo", "roofline"],
+        )
+        assert ap.parse_args(["--only", "paper-opt"]).only == "paper-opt"
+    finally:
+        sys.argv = old_argv
+    assert "paper-opt" in open(br.__file__).read()

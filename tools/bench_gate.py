@@ -20,6 +20,13 @@ exactly b_us == 0) exploded for near-zero baselines.  The ratio's
 denominator is now clamped to the slack and a sub-``--abs-tol`` drift
 never fails regardless of its relative size.
 
+Every failure is collected and reported in ONE run (ISSUE 5 satellite):
+all regressed cells, all disappeared cells, and all malformed cells —
+a malformed cell (missing key fields or ``sim_us``) is skipped and
+reported instead of crashing the comparison mid-way, so a re-bless
+after an intentional change needs exactly one CI round-trip.
+``--update-baseline`` refuses to bless a dump with malformed cells.
+
 New cells in the fresh run are reported but never fail the gate — adding
 coverage is always allowed.  To bless an intentional change::
 
@@ -37,11 +44,24 @@ import shutil
 import sys
 
 
-def load_cells(path: str) -> dict[tuple, dict]:
+def load_cells(path: str) -> tuple[dict[tuple, dict], list[str]]:
+    """Parse a trajectory dump into ``{key: cell}`` plus a list of
+    malformed-cell descriptions.  A cell missing its key fields or its
+    ``sim_us`` is reported and *skipped* instead of aborting the whole
+    comparison (ISSUE 5 satellite: the gate reports every problem in one
+    run, so a re-bless needs one CI round-trip, not one per bad cell)."""
     with open(path) as f:
         payload = json.load(f)
-    cells = payload.get("cells", [])
-    return {(c["table"], c["impl"], c["k"], c["c"]): c for c in cells}
+    cells, bad = {}, []
+    for i, c in enumerate(payload.get("cells", [])):
+        try:
+            key = (c["table"], c["impl"], c["k"], c["c"])
+            float(c["sim_us"])
+        except (KeyError, TypeError, ValueError) as e:
+            bad.append(f"{path}: cell #{i} malformed ({e!r}): {c!r:.120}")
+            continue
+        cells[key] = c
+    return cells, bad
 
 
 def main(argv=None) -> int:
@@ -83,12 +103,16 @@ def main(argv=None) -> int:
             "exist (benchmarks.run emitted zero cells?)"
         )
         return 1
-    fresh = load_cells(args.fresh)
+    fresh, fresh_bad = load_cells(args.fresh)
     if not fresh:
         print(f"bench_gate: FAIL — {args.fresh!r} holds zero cells")
         return 1
 
     if args.update_baseline:
+        if fresh_bad:
+            for line in fresh_bad:
+                print(f"bench_gate: FAIL — will not bless {line}")
+            return 1
         shutil.copyfile(args.fresh, args.baseline)
         print(
             f"bench_gate: blessed {args.baseline!r} from {args.fresh!r} "
@@ -102,12 +126,12 @@ def main(argv=None) -> int:
             "with --update-baseline and commit it"
         )
         return 1
-    base = load_cells(args.baseline)
+    base, base_bad = load_cells(args.baseline)
     if not base:
         print(f"bench_gate: FAIL — baseline {args.baseline!r} holds zero cells")
         return 1
 
-    failures: list[str] = []
+    failures: list[str] = fresh_bad + base_bad
     worst_key, worst_rel = None, 0.0
     for key, bcell in sorted(base.items(), key=lambda kv: repr(kv[0])):
         fcell = fresh.get(key)

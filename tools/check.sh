@@ -36,7 +36,8 @@ else
         tests/test_passes.py \
         tests/test_validate.py \
         tests/test_reorder_split.py \
-        tests/test_color_pack.py
+        tests/test_color_pack.py \
+        tests/test_issue5.py
 fi
 
 # lint (CI-fast-job parity): ruff when installed, else a compile check.
@@ -49,6 +50,11 @@ if [[ "${CHECK_SKIP_LINT:-0}" != "1" ]]; then
         python -m compileall -q src/repro/core tools
     fi
 fi
+
+# paper-scale OPT smoke (ISSUE 5 CI satellite): a single p=1152 alltoall
+# cell through the full optimize-validate pipeline, CHECK_TIMEOUT-bounded,
+# so the optimizer's scalability cannot silently regress in the fast job.
+timeout "$T" python -m benchmarks.run --only paper-opt | tail -n 5
 
 # benchmark smoke -> fresh trajectory + the OPT/OPT2/OPT3 delta table (the
 # delta file is the CI artifact reviewers diff); the gate fails on zero
