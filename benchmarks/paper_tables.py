@@ -421,6 +421,69 @@ def table_paper_opt_smoke():
     ]
 
 
+#: DEG scenarios (ISSUE 6): graceful degradation at paper scale.  Each
+#: entry is (impl, op, alg, gen_k, payloads, FaultSpec factory).  The
+#: headline cell is the paper's own machine losing one of its two OmniPath
+#: rails under the k=2 lane alltoall — the repaired schedule on the
+#: degraded machine vs the k=1 schedule a native library would fall back
+#: to generating from scratch on the surviving rail.
+DEG_CASES = [
+    ("deg:klane_a2a", "alltoall", "klane", 2, [1, 869], "dead_rail"),
+    ("deg:fulllane_a2a", "alltoall", "fulllane", 2, [1, 869], "dead_rail"),
+    ("deg:klane_a2a_relay", "alltoall", "klane", 2, [1, 869], "dead_port"),
+]
+
+
+def table_degraded():
+    """ISSUE 6: fault-repaired schedules priced on the degraded machine.
+
+    ``sim_us`` is the repaired schedule simulated under the fault (the gate
+    tracks the degraded trajectory); ``healthy_us`` is the same family on
+    the intact machine, and for the dead-rail rows ``native_us`` is the
+    natively regenerated k=1 schedule on a healthy one-rail machine — the
+    repair-vs-regenerate comparison the graceful-degradation story rests
+    on.  The dead-port rows exercise the relay rewrite (inter traffic of
+    one NIC-dead rank staged through a surviving local rank)."""
+    import dataclasses
+
+    from repro.core.faults import FaultSpec, apply_faults
+
+    scenarios = {
+        "dead_rail": FaultSpec(dead_rails=1),
+        "dead_port": FaultSpec(dead_ranks=(TOPO.rank_of(1, 1),)),
+    }
+    rows = []
+    for impl, op, alg, gen_k, payloads, sname in DEG_CASES:
+        spec = scenarios[sname]
+        degraded = apply_faults(M, spec)
+        for c in payloads:
+            t0 = time.perf_counter()
+            healthy = compiled_schedule(op, alg, TOPO, gen_k, c)
+            healthy_us = simulate(healthy, M).time_us
+            rep = compiled_schedule(op, alg, TOPO, gen_k, c, faults=spec)
+            deg_us = simulate(rep, degraded).time_us
+            row = {
+                "table": "DEG",
+                "impl": impl,
+                "k": gen_k,
+                "c": c,
+                "sim_us": deg_us,
+                "paper_us": "",
+                "wall_s": time.perf_counter() - t0,
+                "healthy_us": healthy_us,
+                "scenario": sname,
+                "fingerprint": spec.fingerprint(),
+            }
+            if sname == "dead_rail":
+                k1_topo = dataclasses.replace(TOPO, k_lanes=1)
+                native = compiled_schedule(op, alg, k1_topo, 1, c)
+                row["native_us"] = simulate(
+                    native, Machine(topo=k1_topo, cost=M.cost)
+                ).time_us
+            rows.append(row)
+    return rows
+
+
 def render_optimizer_deltas(rows) -> list[str]:
     """Human-readable optimized-vs-paper delta lines for the OPT/OPT2/OPT3
     cells (plus the CI paper-opt smoke when present).  ``opt_wall`` is the
@@ -450,4 +513,5 @@ ALL_TABLES = [
     table_optimizer_deltas,
     table_optimizer_deltas2,
     table_optimizer_deltas3,
+    table_degraded,
 ]

@@ -115,8 +115,12 @@ def main() -> None:
         # cell was timed under, the optimizer's own wall-clock
         # (opt_wall_s — ISSUE 5 satellite; the gate stays on sim_us), and
         # the per-pass records.
+        # DEG cells (ISSUE 6) carry the graceful-degradation context: the
+        # healthy-machine time, the natively regenerated fallback where one
+        # exists, and the fault fingerprint that keyed the repaired entry.
         opt_keys = ("base_us", "rounds_before", "rounds_after", "ported",
-                    "opt_wall_s", "passes")
+                    "opt_wall_s", "passes",
+                    "healthy_us", "native_us", "scenario", "fingerprint")
         payload = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "cells": [

@@ -26,6 +26,13 @@ under the machine model and oracle-checking everything it keeps::
                         │  │           from choose_color_budget; tree-aware
                         │  │           byte caps in the bandwidth regime)
                         │  │      ──SplitPayloads─▶ cost-aware lane split
+                        │  │      ──RepairSchedule▶ fault repair (ISSUE 6):
+                        │  │          relay inter hops off dead network
+                        │  │          ports via surviving local ranks
+                        │  │          (schedule_ir.relay_messages), then
+                        │  │          ColorRounds re-pack under the
+                        │  │          reduced per-node lane budget —
+                        │  │          a rewrite, never a regeneration
                         │  └──────CoalesceMessages/CompactRounds─ fixpoint
                         ▼
         objective: (time, rounds, msgs) lexicographic, keep-if-better
@@ -119,6 +126,21 @@ Passes
 * :class:`CoalesceMessages` — fuse same-``(src, dst)`` messages within a
   round (summed elems, concatenated blocks); not monotone (stream count
   feeds the lane bandwidth term), so run it under an evaluating policy.
+* :class:`RepairSchedule` — **fault repair** (ISSUE 6): rewrite a healthy
+  schedule so it stays correct and routable on a degraded machine
+  (:mod:`repro.core.faults`).  Inter-node messages whose endpoint's
+  network port died are relayed through a surviving local rank
+  (:func:`repro.core.schedule_ir.relay_messages` — intra-node stage hops
+  before/after the original round, so the oracle's strict
+  acquisition-before-forwarding order holds by construction), then the
+  schedule is re-packed with :class:`ColorRounds` under the reduced
+  per-node lane budget.  Repair is a *rewrite, never a regeneration* —
+  cached recipes and optimized structures stay useful — and the repaired
+  schedule is re-proved by the data-flow oracle to deliver bit-identical
+  block semantics.  Dead *nodes* are unrepairable by rewrite (their data
+  is gone): the pass raises :class:`repro.core.faults.
+  UnrepairableFaultError` and :func:`repair_schedule` reverts to the
+  input, deferring to the elastic layer's remesh.
 
 :class:`PassManager` composes passes, records per-pass round/message/time
 deltas (the optimizer trajectory surfaced by ``benchmarks.run --json``),
@@ -140,10 +162,16 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.faults import (
+    FaultSpec,
+    UnrepairableFaultError,
+    degradation_of,
+)
 from repro.core.schedule_ir import (
     CompiledSchedule,
     gather_block_csr,
     merge_messages,
+    relay_messages,
     segmented_arange,
     split_messages,
 )
@@ -164,6 +192,8 @@ __all__ = [
     "CompactRounds",
     "SplitPayloads",
     "CoalesceMessages",
+    "RepairSchedule",
+    "repair_schedule",
     "PassRecord",
     "PassManager",
     "optimize_schedule",
@@ -1167,6 +1197,175 @@ class CoalesceMessages:
 
     def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
         return merge_messages(cs)
+
+
+class RepairSchedule:
+    """Fault-repair rewrite (ISSUE 6 tentpole): make a schedule correct and
+    routable on the degraded machine described by a
+    :class:`~repro.core.faults.FaultSpec`.
+
+    Two rewrite steps, both pure array surgery:
+
+    1. **Relay off dead network ports.**  Every inter-node message whose
+       sender or receiver lost its network port is rerouted through the
+       lowest-numbered surviving live-port rank on the same node
+       (:func:`repro.core.schedule_ir.relay_messages`): an intra-node
+       stage-out hop before the original round and/or a stage-in hop after
+       it.  Every hop carries the full payload and block slice, so block
+       semantics are bit-identical — the relay acquires strictly before it
+       forwards, and the final owner still receives every block before any
+       round that consumes it.  Intra-node messages are untouched (shared
+       memory does not ride the NIC).
+    2. **Re-pack under the reduced lane budget.**  When the fault set
+       shrinks a node's surviving rails below the schedule's packing width
+       (or step 1 staged new hops), the schedule is re-colored with the
+       existing bitset :class:`ColorRounds` at ``limit = min surviving
+       lanes`` — the same packer the optimizer uses, so a repaired
+       ``opt:`` schedule keeps its packed structure wherever the budget
+       still allows it.
+
+    Unrepairable faults — a dead *node* whose traffic the schedule still
+    carries (its data is gone), or a dead-port endpoint with no surviving
+    live-port rank on its node — raise
+    :class:`~repro.core.faults.UnrepairableFaultError`; the
+    :func:`repair_schedule` driver catches it and reverts (repair is a
+    rewrite, never a regeneration — regeneration on a shrunk topology is
+    the elastic layer's ``plan_remesh`` job, not the repairer's).
+
+    The rewrite relays payloads (duplicating ``elems`` across hops), so it
+    is *not* recipe-cacheable; degraded entries are cached per fault
+    fingerprint by ``schedule_ir.compiled_schedule(faults=...)`` instead.
+    """
+
+    recipe_safe = False
+
+    def __init__(self, spec: FaultSpec, *, topo: Topology):
+        spec.validate(topo)
+        self.spec = spec
+        self.topo = topo
+        self.name = (
+            f"repair_schedule[{spec.fingerprint()},n={topo.procs_per_node}]"
+        )
+
+    def apply(self, cs: CompiledSchedule) -> CompiledSchedule:
+        spec, topo = self.spec, self.topo
+        if spec.is_healthy or cs.num_msgs == 0:
+            return cs
+        if cs.p != topo.p:
+            raise ValueError(
+                f"schedule has p={cs.p} but repair topology has p={topo.p}"
+            )
+        N, n = topo.num_nodes, topo.procs_per_node
+        deg = degradation_of(spec, topo)
+
+        # dead nodes: their ranks' data is unreachable — no rewrite can
+        # deliver it, so any schedule still touching them is unrepairable
+        if deg.dead_node.any():
+            touched = deg.dead_rank[cs.src] | deg.dead_rank[cs.dst]
+            if bool(touched.any()):
+                raise UnrepairableFaultError(
+                    f"dead node(s) {list(spec.dead_nodes)} own data the "
+                    "schedule must route; rewrite cannot preserve block "
+                    "semantics — shrink the job (plan_remesh) instead"
+                )
+
+        relayed = False
+        if deg.dead_port.any():
+            inter = (cs.src // n) != (cs.dst // n)
+            need_src = inter & deg.dead_port[cs.src]
+            need_dst = inter & deg.dead_port[cs.dst]
+            if bool(need_src.any()) or bool(need_dst.any()):
+                live = (~deg.dead_port).reshape(N, n)
+                has_live = live.any(axis=1)
+                proxy = np.where(
+                    has_live,
+                    np.arange(N, dtype=np.int64) * n + np.argmax(live, axis=1),
+                    -1,
+                )
+                if bool(
+                    (need_src & (proxy[cs.src // n] < 0)).any()
+                    or (need_dst & (proxy[cs.dst // n] < 0)).any()
+                ):
+                    raise UnrepairableFaultError(
+                        "a node lost every live network port; no surviving "
+                        "local rank to relay through — shrink the job instead"
+                    )
+                via_src = np.where(need_src, proxy[cs.src // n], -1)
+                via_dst = np.where(need_dst, proxy[cs.dst // n], -1)
+                cs = relay_messages(cs, via_src, via_dst)
+                relayed = True
+
+        # reduced per-node port budget: the narrowest surviving lane count
+        alive_lanes = deg.lanes[~deg.dead_node]
+        k_eff = max(1, int(alive_lanes.min())) if alive_lanes.size else 1
+        if relayed or cs.max_port_width() > k_eff:
+            cs = ColorRounds(limit=k_eff, procs_per_node=n).apply(cs)
+        return cs
+
+
+def repair_schedule(
+    cs: CompiledSchedule,
+    spec: FaultSpec,
+    *,
+    topo: Topology | None = None,
+    machine: Machine | None = None,
+    validate: bool = True,
+) -> tuple[CompiledSchedule, list[PassRecord]]:
+    """One-call fault repair: rewrite ``cs`` for the degraded machine and
+    oracle-check the result; returns ``(repaired, records)``.
+
+    The revert contract (graceful degradation): when the fault set is
+    unrepairable by rewrite — dead nodes, or a node with no surviving
+    live-port rank — the input schedule is returned *unchanged* with an
+    ``applied=False`` record, never an exception.  Callers that must make
+    progress anyway (the selector's fallback ladder, the chaos harness)
+    pair the revert with an elastic remesh; the degraded simulator prices
+    the un-repaired schedule at ``inf``, so a reverted repair can never
+    win a selection race.  A genuinely broken rewrite (oracle violation)
+    still raises — corruption is a bug, not a degraded mode.
+    """
+    if topo is None and machine is not None:
+        topo = machine.topo
+    if topo is None:
+        raise ValueError("repair_schedule needs topo= or machine=")
+    ps = RepairSchedule(spec, topo=topo)
+    t0 = time.perf_counter()
+    try:
+        new = ps.apply(cs)
+    except UnrepairableFaultError:
+        return cs, [
+            PassRecord(
+                name=ps.name,
+                applied=False,
+                rounds_before=cs.num_rounds,
+                rounds_after=cs.num_rounds,
+                msgs_before=cs.num_msgs,
+                msgs_after=cs.num_msgs,
+                time_before_us=None,
+                time_after_us=None,
+                wall_s=time.perf_counter() - t0,
+                oracle_ok=None,
+            )
+        ]
+    ok = None
+    if validate and new is not cs:
+        report = validate_schedule(new)
+        ok = report.ok
+        report.raise_if_invalid()
+    return new, [
+        PassRecord(
+            name=ps.name,
+            applied=new is not cs,
+            rounds_before=cs.num_rounds,
+            rounds_after=new.num_rounds,
+            msgs_before=cs.num_msgs,
+            msgs_after=new.num_msgs,
+            time_before_us=None,
+            time_after_us=None,
+            wall_s=time.perf_counter() - t0,
+            oracle_ok=ok,
+        )
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -84,6 +84,7 @@ __all__ = [
     "gather_block_csr",
     "split_messages",
     "merge_messages",
+    "relay_messages",
     "kported_alltoall_ir",
     "bruck_alltoall_ir",
     "klane_alltoall_ir",
@@ -454,6 +455,93 @@ def merge_messages(cs: CompiledSchedule) -> CompiledSchedule:
     )
 
 
+def relay_messages(
+    cs: CompiledSchedule,
+    via_src: np.ndarray,
+    via_dst: np.ndarray,
+) -> CompiledSchedule:
+    """Reroute messages through relay ranks — the fault-repair remap
+    primitive (ISSUE 6).
+
+    ``via_src[i] >= 0`` stages message ``i`` out through a relay: the hop
+    ``src -> via_src`` is emitted in a *stage-out* round directly before
+    message ``i``'s original round, and the main hop departs from
+    ``via_src``.  ``via_dst[i] >= 0`` symmetrically stages it in: the main
+    hop lands at ``via_dst`` and a *stage-in* hop ``via_dst -> dst`` is
+    emitted directly after the original round.  ``-1`` leaves that side
+    untouched.  Every hop carries the message's full payload and block
+    slice, so the relayed schedule delivers bit-identical block semantics:
+
+    * stage-out precedes the main hop, so the relay holds the blocks
+      strictly before forwarding them (the oracle's causality rule);
+    * stage-in follows the main hop but still precedes every later
+      original round, so downstream consumers at ``dst`` keep their
+      acquisition-before-requirement ordering.
+
+    Rounds are interleaved per original round — ``[stage-out, original,
+    stage-in]`` — and a stage round is only materialized when some message
+    needs it, so un-relayed regions keep their round structure (and empty
+    original rounds are preserved for round-count parity).  The intended
+    use is routing off-node traffic around dead network ports: the relay
+    hops are *intra-node* (``core.passes.RepairSchedule`` picks surviving
+    local ranks), so repair never creates new off-node traffic.
+    """
+    via_src = np.asarray(via_src, dtype=np.int64)
+    via_dst = np.asarray(via_dst, dtype=np.int64)
+    if via_src.shape != (cs.num_msgs,) or via_dst.shape != (cs.num_msgs,):
+        raise ValueError(
+            f"via_src/via_dst must have shape ({cs.num_msgs},), got "
+            f"{via_src.shape}/{via_dst.shape}"
+        )
+    out = via_src >= 0
+    inn = via_dst >= 0
+    if not out.any() and not inn.any():
+        return cs
+    if (via_src[out] == cs.src[out]).any() or (
+        via_dst[inn] == cs.dst[inn]
+    ).any():
+        raise ValueError("a message cannot relay through its own endpoint")
+    R = cs.num_rounds
+    reps = 1 + out.astype(np.int64) + inn.astype(np.int64)
+    mid = np.repeat(np.arange(cs.num_msgs, dtype=np.int64), reps)
+    pos = segmented_arange(reps)
+    # phase 0 = stage-out, 1 = main, 2 = stage-in (per original round)
+    phase = pos + (~out).astype(np.int64)[mid]
+    main_src = np.where(out, via_src, cs.src)
+    main_dst = np.where(inn, via_dst, cs.dst)
+    hop_src = np.select(
+        [phase == 0, phase == 1],
+        [cs.src[mid], main_src[mid]],
+        default=via_dst[mid],
+    )
+    hop_dst = np.select(
+        [phase == 0, phase == 1],
+        [via_src[mid], main_dst[mid]],
+        default=cs.dst[mid],
+    )
+    rid = cs.round_ids()[mid]
+    keys = rid * 3 + phase
+    # materialize used stage slots; keep every original round (even empty)
+    all_keys = np.union1d(keys, np.arange(R, dtype=np.int64) * 3 + 1)
+    new_rid = np.searchsorted(all_keys, keys)
+    order = np.argsort(new_rid, kind="stable")
+    new_ptr = np.zeros(all_keys.size + 1, dtype=np.int64)
+    np.cumsum(np.bincount(new_rid, minlength=all_keys.size), out=new_ptr[1:])
+    blk_ptr = blk_ids = None
+    if cs.has_blocks:
+        blk_ptr, blk_ids = gather_block_csr(cs.blk_ptr, cs.blk_ids, mid[order])
+    return dataclasses.replace(
+        cs,
+        src=hop_src[order],
+        dst=hop_dst[order],
+        elems=cs.elems[mid][order],
+        round_ptr=new_ptr,
+        blk_ptr=blk_ptr,
+        blk_ids=blk_ids,
+        _stats={},
+    )
+
+
 def _from_rounds(
     op: str,
     algorithm: str,
@@ -739,6 +827,7 @@ def compiled_schedule(
     root: int = 0,
     *,
     optimize: str | None = None,
+    faults=None,
 ) -> CompiledSchedule:
     """Cached compiled schedule for an ``ALGORITHMS`` family.
 
@@ -748,6 +837,15 @@ def compiled_schedule(
     optimize)`` — cached entries share their lazily-built per-topology round
     statistics, so re-simulating a cached schedule under the same machine
     shape is pure array arithmetic.
+
+    ``faults`` (a :class:`repro.core.faults.FaultSpec`) requests the
+    *repaired* schedule for a degraded machine: the healthy (optionally
+    optimized) entry is built first, then rewritten by
+    :func:`repro.core.passes.repair_schedule` and oracle-revalidated.  The
+    fault fingerprint is folded into the cache key, so healthy-topology
+    entries — including recipe replays — are never served under faults
+    (the ISSUE 6 cache-invalidation rule: a tuned schedule cached for a
+    healthy topology is silently wrong the moment the topology degrades).
 
     ``optimize`` selects an optimizer pipeline from
     :data:`repro.core.passes.OPT_MODES` (``"lane"`` keeps strict
@@ -780,6 +878,9 @@ def compiled_schedule(
             ) from None
         passes = factory(topo)
         fingerprint = pipeline_fingerprint(passes)
+    fault_fp = None
+    if faults is not None and not faults.is_healthy:
+        fault_fp = faults.fingerprint()
     key = (
         op,
         algorithm,
@@ -791,6 +892,7 @@ def compiled_schedule(
         root,
         optimize,
         fingerprint,
+        fault_fp,
     )
     with _LOCK:
         hit = _CACHE.get(key)
@@ -800,7 +902,15 @@ def compiled_schedule(
         _CACHE_MISSES += 1
     if root != 0:
         raise ValueError("the ALGORITHMS registry generates root=0 schedules")
-    if optimize is not None:
+    if fault_fp is not None:
+        # repair is a rewrite of the healthy entry (which stays cached and
+        # reusable for other fault sets), never a regeneration
+        base = compiled_schedule(op, algorithm, topo, k, c, root,
+                                 optimize=optimize)
+        from repro.core.passes import repair_schedule
+
+        cs, _ = repair_schedule(base, faults, topo=topo)
+    elif optimize is not None:
         base = compiled_schedule(op, algorithm, topo, k, c, root)
         if all(getattr(ps, "recipe_safe", False) for ps in passes):
             cs = _optimize_via_recipe(base, key[:6] + key[7:], passes)

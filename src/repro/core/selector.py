@@ -46,7 +46,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 
+from repro.core.faults import FaultSpec, apply_faults
 from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
 from repro.core.topology import Machine, Topology, tpu_v5e_machine
@@ -137,17 +139,30 @@ def _sim_payload(
     num_nodes: int,
     procs_per_node: int,
     k_lanes: int,
+    faults: FaultSpec | None = None,
 ) -> float | None:
     """Simulated time (us) of one algorithm at one payload on the proxy of
-    the requested mesh; None if the family cannot be generated there."""
+    the requested mesh; None if the family cannot be generated there.
+
+    Under ``faults`` the proxy shrink is skipped — the spec's node/rank
+    indices address the *real* topology — and the schedule is the
+    fault-repaired one (``compiled_schedule(faults=...)``), priced on the
+    degraded machine.  ``inf`` is a legitimate return there (an
+    unrepairable schedule the degraded simulator refuses to route); the
+    ladder in :func:`select` ranks it last rather than dropping it."""
     machine = _machine_for(num_nodes, procs_per_node, k_lanes)
-    proxy, scale = _proxy_machine(machine)
+    if faults is not None and not faults.is_healthy:
+        proxy, scale = apply_faults(machine, faults), 1.0
+    else:
+        faults = None
+        proxy, scale = _proxy_machine(machine)
     topo = proxy.topo
     c = max(1, int(payload_elems / scale)) if op != "broadcast" else payload_elems
     k = min(topo.k_lanes, topo.procs_per_node)
     base_alg, optimize = _parse_alg(alg)
     try:
-        cs = compiled_schedule(op, base_alg, topo, k, c, optimize=optimize)
+        cs = compiled_schedule(op, base_alg, topo, k, c, optimize=optimize,
+                               faults=faults)
     except AssertionError:
         raise  # validity-oracle failure on an opt: rewrite — never swallow
     except Exception:
@@ -163,18 +178,79 @@ def select(
     num_nodes: int = 2,
     procs_per_node: int = 256,
     k_lanes: int = 8,
+    faults: FaultSpec | None = None,
+    deadline_s: float | None = None,
 ) -> Choice:
     """Pick the cheapest algorithm family for ``op`` at ``payload_elems``
     (total payload for broadcast; per-proc block for scatter; per-pair block
-    for alltoall) on the given (node, lane) machine shape."""
+    for alltoall) on the given (node, lane) machine shape.
+
+    **Graceful degradation** (ISSUE 6): with ``faults`` set, every candidate
+    is the fault-*repaired* schedule priced on the degraded machine, and the
+    race runs as a bounded-time fallback ladder under ``deadline_s``:
+
+    1. the unoptimized families race first — cheap to generate, and one of
+       them is the guaranteed runnable fallback;
+    2. ``opt:`` candidates (optimize + repair, the expensive rung) join the
+       race only while the deadline has not expired — ``deadline_s=0``
+       skips them entirely;
+    3. if every simulation failed (or the deadline killed the whole race),
+       the first base family that *generates* is returned with an ``inf``
+       estimate — the selector never comes back empty-handed.
+
+    A reverted repair (e.g. a dead node) prices at ``inf`` on the degraded
+    machine, so it ranks behind any actually-runnable candidate but still
+    satisfies "always returns a schedule" for the elastic layer to act on.
+    """
+    if faults is not None and faults.is_healthy:
+        faults = None
     machine = _machine_for(num_nodes, procs_per_node, k_lanes)
-    proxy, _ = _proxy_machine(machine)
+    if faults is not None:
+        race_topo = machine.topo  # fault indices address the real topology
+    else:
+        race_topo = _proxy_machine(machine)[0].topo
+    t0 = time.monotonic()
+
+    def expired() -> bool:
+        return deadline_s is not None and time.monotonic() - t0 >= deadline_s
+
+    algs = _candidate_algs(op, race_topo)
+    base_algs = [a for a in algs if not a.startswith("opt:")]
+    opt_algs = [a for a in algs if a.startswith("opt:")]
 
     candidates: dict[str, float] = {}
-    for alg in _candidate_algs(op, proxy.topo):
-        t = _sim_payload(op, alg, payload_elems, num_nodes, procs_per_node, k_lanes)
+    for alg in base_algs:  # the guaranteed rung: never deadline-gated
+        t = _sim_payload(op, alg, payload_elems, num_nodes, procs_per_node,
+                         k_lanes, faults)
         if t is not None:
             candidates[alg] = t
+    for alg in opt_algs:  # the expensive rung: only while under deadline
+        if expired():
+            break
+        try:
+            t = _sim_payload(op, alg, payload_elems, num_nodes,
+                             procs_per_node, k_lanes, faults)
+        except AssertionError:
+            if faults is None:
+                raise  # healthy opt: oracle failure is a bug, not a mode
+            t = None  # degraded rewrite rejected — fall down the ladder
+        if t is not None:
+            candidates[alg] = t
+
+    if not candidates:
+        # final rung: return the first family that generates at all
+        k = min(race_topo.k_lanes, race_topo.procs_per_node)
+        c = payload_elems if op == "broadcast" else max(1, payload_elems)
+        for alg in base_algs:
+            try:
+                compiled_schedule(op, alg, race_topo, k, c, faults=faults)
+            except Exception:
+                continue
+            return Choice(op=op, algorithm=alg, est_us=float("inf"),
+                          candidates=((alg, float("inf")),))
+        raise RuntimeError(
+            f"no {op} family generates on {race_topo} — topology unusable"
+        )
 
     ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
     best, est = ranked[0]

@@ -140,37 +140,94 @@ def _simulate_ir(cs, machine: Machine, *, ported: bool) -> SimResult:
     st = cs.stats(topo.procs_per_node)
     R = cs.num_rounds
 
+    # Degraded-machine view (ISSUE 6): ``None`` for healthy machines, which
+    # keeps every arithmetic expression below bit-exact with the reference.
+    # Under faults the SAME port_time/lane_time hooks price the round, with
+    # per-node surviving-lane counts and derated betas broadcast into the
+    # [R, p]/[R, N] grids; traffic that touches a dead port or dead node is
+    # unroutable and prices at inf (repair it first, or remesh).
+    deg = machine.degradation()
+    if deg is not None:
+        k_nodes = deg.lanes  # [N]
+        scale_n = deg.beta_scale  # [N]
+        k_procs = np.repeat(k_nodes, topo.procs_per_node)  # [p]
+        scale_p = np.repeat(scale_n, topo.procs_per_node)  # [p]
+
     # --- per-processor port terms (vectorized over the [R, p] grids) -------
     # beta/alpha selection matches the reference: the slower network params
     # apply whenever any of the processor's round traffic is off-node.
     s_mask = st.send_cnt > 0
-    t_send = port_time(
-        cost, st.send_elems, st.send_cnt, st.send_inter, k, ported=ported
-    )
+    if deg is None:
+        t_send = port_time(
+            cost, st.send_elems, st.send_cnt, st.send_inter, k, ported=ported
+        )
+    else:
+        t_send = port_time(
+            cost,
+            np.where(st.send_inter, st.send_elems * scale_p, st.send_elems),
+            st.send_cnt,
+            st.send_inter,
+            np.maximum(k_procs, 1),
+            ported=ported,
+        )
+        t_send = np.where(
+            (st.send_inter & deg.dead_port) | (s_mask & deg.dead_rank),
+            np.inf,
+            t_send,
+        )
     t_send = np.where(s_mask, t_send, 0.0)
 
     r_mask = st.recv_cnt > 0
-    t_recv = port_time(
-        cost,
-        st.recv_elems,
-        st.recv_cnt,
-        st.recv_inter,
-        k,
-        ported=ported,
-        alpha_batches=False,
-    )
+    if deg is None:
+        t_recv = port_time(
+            cost,
+            st.recv_elems,
+            st.recv_cnt,
+            st.recv_inter,
+            k,
+            ported=ported,
+            alpha_batches=False,
+        )
+    else:
+        t_recv = port_time(
+            cost,
+            np.where(st.recv_inter, st.recv_elems * scale_p, st.recv_elems),
+            st.recv_cnt,
+            st.recv_inter,
+            np.maximum(k_procs, 1),
+            ported=ported,
+            alpha_batches=False,
+        )
+        t_recv = np.where(
+            (st.recv_inter & deg.dead_port) | (r_mask & deg.dead_rank),
+            np.inf,
+            t_recv,
+        )
     t_recv = np.where(r_mask, t_recv, 0.0)
 
     # --- per-node lane bandwidth terms -------------------------------------
     streams = np.maximum(st.node_out_msgs, st.node_in_msgs)
     n_mask = streams > 0
     max_inflight = int(streams.max()) if streams.size else 0
-    t_node = lane_time(cost, np.maximum(st.node_out, st.node_in), streams, k)
+    if deg is None:
+        t_node = lane_time(
+            cost, np.maximum(st.node_out, st.node_in), streams, k
+        )
+    else:
+        t_node = lane_time(
+            cost,
+            np.maximum(st.node_out, st.node_in) * scale_n,
+            streams,
+            np.maximum(k_nodes, 1),
+        )
+        t_node = np.where(n_mask & (k_nodes == 0), np.inf, t_node)
     t_node = np.where(n_mask, t_node, 0.0)
 
     # --- shared-memory aggregate cap ---------------------------------------
     i_mask = st.node_intra_cnt > 0
     t_intra = cost.alpha_intra + st.node_intra / cost.node_bw_elems
+    if deg is not None:
+        t_intra = np.where(i_mask & deg.dead_node, np.inf, t_intra)
     t_intra = np.where(i_mask, t_intra, 0.0)
 
     round_times = np.maximum(
@@ -196,6 +253,13 @@ def simulate_msgs(
     schedule: Schedule, machine: Machine, *, ported: bool = False
 ) -> SimResult:
     """Reference per-``Msg`` simulation (the original implementation)."""
+    if machine.degradation() is not None:
+        # The reference loop prices healthy machines only; silently charging
+        # healthy costs for a degraded machine would be a wrong oracle.
+        raise NotImplementedError(
+            "simulate_msgs prices healthy machines; use simulate() for a "
+            "FaultedMachine"
+        )
     topo, cost = machine.topo, machine.cost
     k = topo.k_lanes
     total_time = 0.0

@@ -104,6 +104,18 @@ class Machine:
     def p(self) -> int:
         return self.topo.p
 
+    def degradation(self):
+        """Per-node fault state for the simulator, or ``None`` when healthy.
+
+        Healthy machines (this base class) always return ``None``, which
+        keeps ``core.simulate``'s fast path bit-exact with the per-``Msg``
+        reference.  ``core.faults.FaultedMachine`` overrides this with a
+        :class:`~repro.core.faults.Degradation` (surviving lanes per node,
+        derated link factors, dead ports/ranks) that the simulator prices
+        through the same ``port_time``/``lane_time`` hooks.
+        """
+        return None
+
 
 # ---------------------------------------------------------------------------
 # Presets.

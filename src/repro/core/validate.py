@@ -54,6 +54,7 @@ __all__ = [
     "ValidationReport",
     "initial_holds",
     "validate_schedule",
+    "check_schedule",
     "block_dependencies",
     "rewrite_window",
     "window_hop_fraction",
@@ -75,6 +76,7 @@ class ValidationReport:
     causality_violations: int
     first_violation: str | None
     missing_final: int
+    first_missing: str | None = None
 
     def raise_if_invalid(self) -> "ValidationReport":
         if not self.ok:
@@ -82,7 +84,7 @@ class ValidationReport:
                 f"invalid {self.op}/{self.algorithm} schedule: "
                 f"{self.causality_violations} causality violation(s) "
                 f"({self.first_violation}), {self.missing_final} final "
-                f"block(s) undelivered"
+                f"block(s) undelivered ({self.first_missing})"
             )
         return self
 
@@ -274,6 +276,16 @@ def validate_schedule(
     return report
 
 
+def check_schedule(
+    cs: CompiledSchedule, *, raise_on_error: bool = False
+) -> ValidationReport:
+    """Alias of :func:`validate_schedule` — the name the robustness tooling
+    (chaos harness, repair tests) uses when the point is the *raising* mode:
+    a failed check names the offending round/message (first causality
+    violation) or the first undelivered final (owner, block) pair."""
+    return validate_schedule(cs, raise_on_error=raise_on_error)
+
+
 def _validate(
     cs: CompiledSchedule, affected: np.ndarray | None
 ) -> ValidationReport:
@@ -357,7 +369,14 @@ def _validate(
         ffound = (uniq_keys[fidx] == fkeys) & in_span
     else:
         ffound = np.zeros_like(fin0)
-    missing = int((~(fin0 | ffound)).sum())
+    delivered = fin0 | ffound
+    missing = int((~delivered).sum())
+    first_missing = None
+    if missing:
+        i = int(np.argmin(delivered))
+        first_missing = (
+            f"final owner {int(owners[i])} never receives block {int(need[i])}"
+        )
 
     return ValidationReport(
         ok=(violations == 0 and missing == 0),
@@ -368,6 +387,7 @@ def _validate(
         causality_violations=violations,
         first_violation=first_violation,
         missing_final=missing,
+        first_missing=first_missing,
     )
 
 

@@ -17,6 +17,7 @@ the next step and orthogonal to the paper's collectives).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import jax
@@ -59,6 +60,7 @@ class ServeEngine:
         capacity: int = 512,
         sampler: Callable = greedy_sample,
         seed: int = 0,
+        monitor=None,
     ):
         if not cfg.embed_inputs:
             raise ValueError("serving engine drives token models")
@@ -71,6 +73,14 @@ class ServeEngine:
         self.slots: list[Request | None] = [None] * num_slots
         self.cache = None
         self.pos = 0  # synchronized cache position
+        # optional fault/straggler hook: any object with observe(seconds)
+        # and observe_fault(event) -> "ok"|"warn"|"evict" (duck-typed so the
+        # jax-free decision layer repro.training.elastic.StragglerMonitor
+        # plugs straight in).  run() times every decode step through it and
+        # stops decoding on "evict" — the chaos harness drives this.
+        self.monitor = monitor
+        self.fault_events: list = []
+        self.monitor_actions: list[str] = []
 
         self._decode = jax.jit(
             lambda p, t, c, i: lm.decode_step(cfg, p, t, c, i)
@@ -128,6 +138,20 @@ class ServeEngine:
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
 
+    def inject_fault(self, event) -> str:
+        """Report a mid-run fault (a ``repro.training.elastic.FaultEvent``)
+        into the engine: the event is recorded and folded into the monitor's
+        warn/evict policy.  Returns the resulting action; without a monitor
+        the default policy is kind-based (node faults evict, lane faults
+        warn — lanes are survivable via schedule repair)."""
+        self.fault_events.append(event)
+        if self.monitor is not None:
+            action = self.monitor.observe_fault(event)
+        else:
+            action = "evict" if getattr(event, "kind", "node") == "node" else "warn"
+        self.monitor_actions.append(action)
+        return action
+
     def drain(self) -> list[Request]:
         """Release finished requests from their slots."""
         out = []
@@ -138,7 +162,14 @@ class ServeEngine:
         return out
 
     def run(self, requests: list[Request], *, max_steps: int = 256) -> list[Request]:
-        """Convenience driver: admit everything (in waves), decode to done."""
+        """Convenience driver: admit everything (in waves), decode to done.
+
+        With a monitor attached every decode step is timed through
+        ``monitor.observe``; an "evict" verdict (a straggling host over the
+        hard deadline ``patience`` times, or an injected node fault) stops
+        the decode loop — the finished requests so far are returned and the
+        caller remeshes (``elastic.plan_remesh_for_faults``) before
+        resuming the rest."""
         pending = list(requests)
         finished: list[Request] = []
         steps = 0
@@ -146,7 +177,13 @@ class ServeEngine:
             if pending and any(s is None for s in self.slots) and self.cache is None:
                 n = self.admit(pending)
                 pending = pending[len(n):]
+            t0 = time.perf_counter()
             self.step()
+            if self.monitor is not None:
+                action = self.monitor.observe(time.perf_counter() - t0)
+                self.monitor_actions.append(action)
+                if action == "evict":
+                    break
             finished.extend(self.drain())
             steps += 1
             if not any(s is not None and not s.done for s in self.slots) and not pending:

@@ -151,32 +151,51 @@ def restore(ckpt_dir: str, step: int, like_tree, *, shardings=None):
 
 class AsyncCheckpointer:
     """Double-buffered background writer: device->host fetch is synchronous,
-    file IO overlaps subsequent steps."""
+    file IO overlaps subsequent steps.
+
+    Error contract: background-write failures are queued (never clobbered —
+    two failed writes surface as two errors) and raised one per
+    ``wait()``/``save()`` call, oldest first.  ``save()`` submits the *new*
+    write before raising a pending error, so a failure of step N's write
+    can never silently swallow step N+1's — the caller sees N's error and
+    N+1's write is already in flight (its own failure, if any, surfaces on
+    the next call).  Call ``wait()`` until it returns cleanly to drain."""
 
     def __init__(self, ckpt_dir: str, *, keep_last: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
-        self._error: Exception | None = None
+        self._errors: list[Exception] = []
+
+    def _join(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _raise_pending(self) -> None:
+        if self._errors:
+            raise self._errors.pop(0)
 
     def save(self, step: int, tree, *, extra: dict | None = None) -> None:
-        self.wait()
+        self._join()
+        # after _join() every queued error belongs to a *prior* write; the
+        # new write's failure (it may finish before we return) must surface
+        # on the NEXT call, not this one
+        prior_errors = len(self._errors)
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
             try:
                 save(self.ckpt_dir, step, host_tree, extra=extra,
                      keep_last=self.keep_last)
-            except Exception as e:  # surfaced on next wait()
-                self._error = e
+            except Exception as e:  # queued; surfaced on next wait()/save()
+                self._errors.append(e)
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
+        if prior_errors:
+            raise self._errors.pop(0)
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        self._join()
+        self._raise_pending()

@@ -63,6 +63,34 @@ def test_async_checkpointer(tmp_path, params):
     _trees_equal(params, got)
 
 
+def test_async_checkpointer_double_failure_surfaces_both(tmp_path, params, monkeypatch):
+    """A failed background write must never swallow the next one: step N's
+    error is raised by the save(N+1) call, but N+1's write is already in
+    flight by then — and if it fails too, wait() raises N+1's error rather
+    than silently dropping it (the pre-fix writer both clobbered the queued
+    error and aborted save() before spawning the new write)."""
+    d = str(tmp_path)
+    fails = []
+
+    def bad_save(ckpt_dir, step, tree, **kw):
+        fails.append(step)
+        raise OSError(f"disk full at step {step}")
+
+    monkeypatch.setattr(C, "save", bad_save)
+    ac = C.AsyncCheckpointer(d)
+    ac.save(1, params)
+    ac._join()  # deterministic: write 1 has failed before save(2)
+    with pytest.raises(OSError, match="step 1"):
+        ac.save(2, params)
+    # write 2 was still submitted despite the raise ...
+    ac._join()
+    assert fails == [1, 2]
+    # ... and its own failure surfaces on the next wait()
+    with pytest.raises(OSError, match="step 2"):
+        ac.wait()
+    ac.wait()  # queue drained: clean
+
+
 def test_restore_with_shardings(tmp_path, params):
     from jax.sharding import NamedSharding, PartitionSpec as P
     d = str(tmp_path)

@@ -10,7 +10,11 @@ import pytest
 from repro.core import schedule as S
 from repro.core import schedule_ir as IR
 from repro.core.topology import Topology
-from repro.core.validate import ValidationReport, validate_schedule
+from repro.core.validate import (
+    ValidationReport,
+    check_schedule,
+    validate_schedule,
+)
 
 SMALL_TOPOS = [
     Topology(2, 2, 1),
@@ -107,6 +111,104 @@ def test_report_shape():
     assert isinstance(rep, ValidationReport)
     assert rep.num_block_hops == cs.blk_ids.size
     assert rep.first_violation is None
+
+
+# ---------------------------------------------------------------------------
+# check_schedule(raise_on_error=True) forensics (ISSUE 6 satellite): each
+# corruption class raises naming the offending round/message or final pair.
+# ---------------------------------------------------------------------------
+
+
+def _drop_message(cs, m):
+    """Remove message ``m`` from the schedule (CSR surgery)."""
+    keep = np.ones(cs.num_msgs, dtype=bool)
+    keep[m] = False
+    nblk = np.diff(cs.blk_ptr)[keep]
+    ptr = np.zeros(cs.num_msgs, dtype=np.int64)
+    np.cumsum(nblk, out=ptr[1:])
+    bkeep = np.repeat(keep, np.diff(cs.blk_ptr))
+    rp = cs.round_ptr.copy()
+    rp[np.searchsorted(cs.round_ptr, m, side="right"):] -= 1
+    return dataclasses.replace(
+        cs, src=cs.src[keep], dst=cs.dst[keep], elems=cs.elems[keep],
+        round_ptr=rp, blk_ptr=ptr, blk_ids=cs.blk_ids[bkeep], _stats={},
+    )
+
+
+def test_check_schedule_dropped_message_names_final_pair():
+    """Dropping a delivering message raises naming the starved owner and
+    block — not just a count."""
+    topo = Topology(3, 4, 2)
+    cs = IR.klane_alltoall_ir(topo, 3)
+    # find a message whose block set contains a final delivery (blk % p == dst)
+    p = cs.p
+    m = next(
+        int(i) for i in range(cs.num_msgs)
+        if any(b % p == cs.dst[i] for b in
+               cs.blk_ids[cs.blk_ptr[i]:cs.blk_ptr[i + 1]])
+    )
+    bad = _drop_message(cs, m)
+    with pytest.raises(AssertionError, match="final owner"):
+        check_schedule(bad, raise_on_error=True)
+    rep = check_schedule(bad)
+    assert not rep.ok and rep.missing_final >= 1
+    assert "never receives block" in rep.first_missing
+
+
+def test_check_schedule_wrong_block_names_round_and_message():
+    """Rewriting a message's block to one its sender does not hold raises
+    naming the round and the src->dst message."""
+    topo = Topology(3, 4, 2)
+    cs = IR.klane_alltoall_ir(topo, 3)
+    p = cs.p
+    # pick an inter-node message and give it a block its source never holds
+    m = next(
+        int(i) for i in range(cs.num_msgs)
+        if cs.src[i] // topo.procs_per_node != cs.dst[i] // topo.procs_per_node
+    )
+    blk = cs.blk_ids.copy()
+    wrong_owner = (int(cs.src[m]) + 1) % p
+    blk[cs.blk_ptr[m]] = wrong_owner * p + int(cs.dst[m])
+    bad = dataclasses.replace(cs, blk_ids=blk, _stats={})
+    rid = int(np.searchsorted(cs.round_ptr, m, side="right")) - 1
+    with pytest.raises(
+        AssertionError,
+        match=rf"round {rid}: {int(cs.src[m])}->{int(cs.dst[m])} sends block",
+    ):
+        check_schedule(bad, raise_on_error=True)
+
+
+def test_check_schedule_causality_violation_names_round():
+    """Reversing the round order of a forwarding schedule raises with the
+    offending round in the message (forwarders fire before providers)."""
+    cs = IR.bruck_alltoall_ir(12, 2, 7)
+    R = cs.num_rounds
+    order = np.concatenate(
+        [np.arange(cs.round_ptr[r], cs.round_ptr[r + 1])
+         for r in range(R - 1, -1, -1)]
+    )
+    sizes = [int(cs.round_ptr[r + 1] - cs.round_ptr[r])
+             for r in range(R - 1, -1, -1)]
+    ptr = np.zeros(R + 1, dtype=np.int64)
+    np.cumsum(sizes, out=ptr[1:])
+    nblk = np.diff(cs.blk_ptr)[order]
+    bptr = np.zeros(cs.num_msgs + 1, dtype=np.int64)
+    np.cumsum(nblk, out=bptr[1:])
+    bidx = np.repeat(cs.blk_ptr[order], nblk) + IR.segmented_arange(nblk)
+    bad = dataclasses.replace(
+        cs, src=cs.src[order], dst=cs.dst[order], elems=cs.elems[order],
+        round_ptr=ptr, blk_ptr=bptr, blk_ids=cs.blk_ids[bidx], _stats={},
+    )
+    rep = check_schedule(bad)
+    assert not rep.ok and rep.causality_violations > 0
+    with pytest.raises(AssertionError, match=r"round \d+: \d+->\d+ sends block"):
+        check_schedule(bad, raise_on_error=True)
+
+
+def test_check_schedule_is_validate_schedule():
+    cs = IR.klane_alltoall_ir(Topology(2, 2, 1), 3)
+    assert check_schedule(cs, raise_on_error=True).ok
+    assert check_schedule(cs) == validate_schedule(cs)
 
 
 @pytest.mark.slow

@@ -44,14 +44,29 @@ import shutil
 import sys
 
 
+class TrajectoryUnreadable(Exception):
+    """The dump file exists but cannot be read/parsed as a trajectory."""
+
+
 def load_cells(path: str) -> tuple[dict[tuple, dict], list[str]]:
     """Parse a trajectory dump into ``{key: cell}`` plus a list of
     malformed-cell descriptions.  A cell missing its key fields or its
     ``sim_us`` is reported and *skipped* instead of aborting the whole
     comparison (ISSUE 5 satellite: the gate reports every problem in one
-    run, so a re-bless needs one CI round-trip, not one per bad cell)."""
-    with open(path) as f:
-        payload = json.load(f)
+    run, so a re-bless needs one CI round-trip, not one per bad cell).
+
+    Raises :class:`TrajectoryUnreadable` — with a one-line human message —
+    when the file itself is unreadable, not JSON, or not a cell dict
+    (ISSUE 6 satellite: a truncated or hand-mangled baseline must produce
+    a clear FAIL line, not a traceback)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        iter(payload.get("cells", []))
+    except (OSError, ValueError, AttributeError) as e:
+        raise TrajectoryUnreadable(
+            f"{path!r} is not a readable trajectory dump ({e})"
+        ) from e
     cells, bad = {}, []
     for i, c in enumerate(payload.get("cells", [])):
         try:
@@ -103,7 +118,11 @@ def main(argv=None) -> int:
             "exist (benchmarks.run emitted zero cells?)"
         )
         return 1
-    fresh, fresh_bad = load_cells(args.fresh)
+    try:
+        fresh, fresh_bad = load_cells(args.fresh)
+    except TrajectoryUnreadable as e:
+        print(f"bench_gate: FAIL — {e}")
+        return 1
     if not fresh:
         print(f"bench_gate: FAIL — {args.fresh!r} holds zero cells")
         return 1
@@ -126,7 +145,14 @@ def main(argv=None) -> int:
             "with --update-baseline and commit it"
         )
         return 1
-    base, base_bad = load_cells(args.baseline)
+    try:
+        base, base_bad = load_cells(args.baseline)
+    except TrajectoryUnreadable as e:
+        print(
+            f"bench_gate: FAIL — {e}; restore the committed baseline or "
+            "re-bless with --update-baseline"
+        )
+        return 1
     if not base:
         print(f"bench_gate: FAIL — baseline {args.baseline!r} holds zero cells")
         return 1

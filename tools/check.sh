@@ -5,6 +5,7 @@
 #   * the schedule/IR/optimizer/oracle/scheduling-pass test files (the
 #     paper-reproduction core, no jax compilation in the loop),
 #   * a lint step (ruff when available, else a bytecode compile check),
+#   * a chaos smoke (seeded fault injection -> repair -> oracle, ISSUE 6),
 #   * a paper-tables benchmark smoke writing the fresh trajectory to
 #     BENCH_schedules.fresh.json, and
 #   * tools/bench_gate.py comparing it against the committed
@@ -17,6 +18,8 @@
 # Per-step wall-clock guards default to CHECK_TIMEOUT=600 seconds; shared
 # CI runners are slower than the dev box, so export a larger value — or
 # CHECK_TIMEOUT=0 to disable (GNU timeout treats 0 as "no timeout").
+# A step killed by the timeout is *named* on stderr (ISSUE 6 satellite) —
+# "check.sh failed" with no culprit cost a CI round-trip to diagnose.
 #
 # To bless a new trajectory baseline after an intentional change:
 #   python tools/bench_gate.py BENCH_schedules.fresh.json --update-baseline
@@ -26,10 +29,26 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 T="${CHECK_TIMEOUT:-600}"
 
+# run_step <name> <cmd...>: timeout-bounded named step.  GNU timeout exits
+# 124 (or 128+9 after KILL escalation) when it fired — report WHICH step
+# died instead of letting `set -e` end the script anonymously.
+run_step() {
+    local name="$1"; shift
+    local rc=0
+    timeout "$T" "$@" || rc=$?
+    if [[ $rc -ge 124 ]]; then
+        echo "check.sh: step '$name' killed by CHECK_TIMEOUT=${T}s" >&2
+        exit $rc
+    elif [[ $rc -ne 0 ]]; then
+        echo "check.sh: step '$name' failed (exit $rc)" >&2
+        exit $rc
+    fi
+}
+
 if [[ "${CHECK_FULL:-0}" == "1" ]]; then
-    timeout "$T" python -m pytest -x -q
+    run_step "pytest-full" python -m pytest -x -q
 else
-    timeout "$T" python -m pytest -x -q \
+    run_step "pytest-fast" python -m pytest -x -q \
         tests/test_schedules.py \
         tests/test_schedule_ir.py \
         tests/test_simulator.py \
@@ -37,7 +56,8 @@ else
         tests/test_validate.py \
         tests/test_reorder_split.py \
         tests/test_color_pack.py \
-        tests/test_issue5.py
+        tests/test_issue5.py \
+        tests/test_faults.py
 fi
 
 # lint (CI-fast-job parity): ruff when installed, else a compile check.
@@ -51,10 +71,17 @@ if [[ "${CHECK_SKIP_LINT:-0}" != "1" ]]; then
     fi
 fi
 
+# chaos smoke (ISSUE 6 CI satellite): seeded fault injection on a small
+# topology — sample faults, repair every alltoall family, oracle-check,
+# and exercise the selector's degraded ladder.  Deterministic and < 30 s.
+run_step "chaos-smoke" python -m tools.chaos --seed 0 \
+    --nodes 3 --procs 4 --lanes 2 --out chaos_report.json
+
 # paper-scale OPT smoke (ISSUE 5 CI satellite): a single p=1152 alltoall
 # cell through the full optimize-validate pipeline, CHECK_TIMEOUT-bounded,
 # so the optimizer's scalability cannot silently regress in the fast job.
-timeout "$T" python -m benchmarks.run --only paper-opt | tail -n 5
+run_step "paper-opt-smoke" bash -c \
+    "set -o pipefail; python -m benchmarks.run --only paper-opt | tail -n 5"
 
 # benchmark smoke -> fresh trajectory + the OPT/OPT2/OPT3 delta table (the
 # delta file is the CI artifact reviewers diff); the gate fails on zero
@@ -63,7 +90,8 @@ timeout "$T" python -m benchmarks.run --only paper-opt | tail -n 5
 FRESH="BENCH_schedules.fresh.json"
 DELTAS="BENCH_deltas.fresh.txt"
 rm -f "$FRESH" "$DELTAS"
-timeout "$T" python -m benchmarks.run --only paper --json "$FRESH" \
-    --deltas "$DELTAS" | tail -n 30
+run_step "bench-smoke" bash -c \
+    "set -o pipefail; python -m benchmarks.run --only paper --json '$FRESH' \
+        --deltas '$DELTAS' | tail -n 30"
 python tools/bench_gate.py "$FRESH" --baseline BENCH_schedules.json
 echo "check.sh: OK"
