@@ -52,6 +52,7 @@ from repro.core.passes import (
 from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
 from repro.core.topology import Machine, Topology, hydra_machine
+from repro.obs.trace import TRACER
 
 M = hydra_machine()
 TOPO = M.topo  # 36 x 32, k=2 physical
@@ -180,6 +181,35 @@ def table_alltoall():
     return rows
 
 
+def _pass_walls(records, mark=None) -> str:
+    """Per-pass wall-time breakdown for the rendered delta table (ISSUE 7
+    satellite).  Sourced from the flight recorder when tracing is enabled:
+    the ``pass:{name}`` spans emitted since ``mark`` by this cell's
+    PassManager run, with the PassRecord wall clocks as the untraced
+    fallback — both sum repeat visits of a pass across fixpoint sweeps.
+    Pass names are truncated at the first ``[`` (the parameter brackets
+    carry commas) and pairs are ``;``-joined, so the breakdown stays one
+    CSV-safe column in the comma-separated delta lines."""
+    walls: dict[str, float] = {}
+    order: list[str] = []
+
+    def add(name: str, secs: float) -> None:
+        name = name.split("[", 1)[0]
+        if name not in walls:
+            order.append(name)
+            walls[name] = 0.0
+        walls[name] += secs
+
+    if TRACER and mark is not None:
+        for rec in TRACER.records_since(mark):
+            if rec.get("ph") == "X" and rec["name"].startswith("pass:"):
+                add(rec["name"][len("pass:"):], rec.get("dur", 0) / 1e6)
+    if not walls:
+        for r in records:
+            add(r.name, r.wall_s)
+    return ";".join(f"{n}={walls[n]:.3f}" for n in order)
+
+
 def table_optimizer_deltas():
     """Beyond-paper: the schedule optimizer (``core.passes``) applied to
     the paper's algorithms at paper scale — round compaction up to port
@@ -209,6 +239,7 @@ def table_optimizer_deltas():
                 policy="improved",
                 validate=True,
             )
+            mark = TRACER.mark() if TRACER else None
             t_opt = time.perf_counter()
             opt, records = pm.run(base)
             opt_wall = time.perf_counter() - t_opt
@@ -223,6 +254,7 @@ def table_optimizer_deltas():
                     "paper_us": PAPER.get((impl[4:], gen_k, c), ""),
                     "wall_s": time.perf_counter() - t0,
                     "opt_wall_s": opt_wall,
+                    "pass_walls": _pass_walls(records, mark),
                     "base_us": base_us,
                     "rounds_before": base.num_rounds,
                     "rounds_after": opt.num_rounds,
@@ -275,6 +307,7 @@ def table_optimizer_deltas2():
                 validate=True,
                 fixpoint=True,
             )
+            mark = TRACER.mark() if TRACER else None
             t_opt = time.perf_counter()
             opt, records = pm.run(base)
             opt_wall = time.perf_counter() - t_opt
@@ -293,6 +326,7 @@ def table_optimizer_deltas2():
                     "paper_us": PAPER.get((impl[5:], gen_k, c), ""),
                     "wall_s": time.perf_counter() - t0,
                     "opt_wall_s": opt_wall,
+                    "pass_walls": _pass_walls(records, mark),
                     "base_us": base_us,
                     "rounds_before": base.num_rounds,
                     "rounds_after": opt.num_rounds,
@@ -352,6 +386,7 @@ def _opt3_cell(impl, op, alg, gen_k, c, ported, table="OPT3"):
         fixpoint=True,
         max_iters=2,
     )
+    mark = TRACER.mark() if TRACER else None
     t_opt = time.perf_counter()
     opt, records = pm.run(base)
     opt_wall = time.perf_counter() - t_opt
@@ -367,6 +402,7 @@ def _opt3_cell(impl, op, alg, gen_k, c, ported, table="OPT3"):
         "paper_us": PAPER.get((impl.split(":", 1)[-1], gen_k, c), ""),
         "wall_s": time.perf_counter() - t0,
         "opt_wall_s": opt_wall,
+        "pass_walls": _pass_walls(records, mark),
         "base_us": base_us,
         "rounds_before": base.num_rounds,
         "rounds_after": opt.num_rounds,
@@ -486,12 +522,15 @@ def table_degraded():
 
 def render_optimizer_deltas(rows) -> list[str]:
     """Human-readable optimized-vs-paper delta lines for the OPT/OPT2/OPT3
-    cells (plus the CI paper-opt smoke when present).  ``opt_wall`` is the
-    optimizer's own wall-clock per cell (ISSUE 5 satellite) — pass-pipeline
-    speed is on the trajectory, though the CI gate stays on ``sim_us``."""
+    cells (plus the CI paper-opt smoke when present).  ``pass_walls`` is
+    the per-pass wall-time breakdown (ISSUE 7 satellite, flight-recorder
+    sourced under ``--deltas``; ``name=secs`` ``;``-joined, last column so
+    the lines stay naively comma-splittable) — it replaces the rendered
+    ``opt_wall_s`` aggregate, which stays on the JSON cells for the CI
+    gate's trajectory."""
     out = [
         "# optimizer: table,impl,c,rounds,opt_rounds,base_us,opt_us,"
-        "speedup,opt_wall_s,paper_us"
+        "speedup,paper_us,pass_walls"
     ]
     for r in rows:
         if r.get("table") not in ("OPT", "OPT2", "OPT3", "OPT3-SMOKE"):
@@ -500,7 +539,7 @@ def render_optimizer_deltas(rows) -> list[str]:
         out.append(
             f"# optimizer: {r['table']},{r['impl']},{r['c']},{r['rounds_before']},"
             f"{r['rounds_after']},{r['base_us']:.2f},{r['sim_us']:.2f},"
-            f"{speedup:.2f}x,{r.get('opt_wall_s', 0.0):.2f},{r['paper_us']}"
+            f"{speedup:.2f}x,{r['paper_us']},{r.get('pass_walls', '')}"
         )
     return out
 

@@ -14,8 +14,15 @@ schedule optimizer's trajectory — so the perf story is tracked across PRs
 compares a fresh ``--json`` dump against the committed baseline and fails
 CI on any >5% ``sim_us`` regression or disappeared cell.
 
+ISSUE 7 observability: ``--trace``/``--trace-jsonl`` export the run's
+flight-recorder spans (Chrome trace-event JSON / raw JSONL) and
+``--metrics`` snapshots the metrics registry; any of them — and
+``--deltas``, whose per-pass breakdown column is flight-recorder
+sourced — enables the tracer for the run.
+
   PYTHONPATH=src python -m benchmarks.run [--skip-hlo] \
-      [--only paper|tpu|hlo|roofline] [--json BENCH_schedules.json]
+      [--only paper|tpu|hlo|roofline] [--json BENCH_schedules.json] \
+      [--trace paper.trace.json] [--metrics paper.metrics.json]
 """
 
 from __future__ import annotations
@@ -35,8 +42,26 @@ def main() -> None:
                     help="write per-cell {table,impl,k,c,sim_us,wall_s} JSON")
     ap.add_argument("--deltas", metavar="FILE", default=None,
                     help="also write the OPT/OPT2/OPT3 optimized-vs-paper "
-                    "delta table to FILE (CI uploads it as an artifact)")
+                    "delta table to FILE (CI uploads it as an artifact); "
+                    "enables the tracer so the per-pass breakdown column "
+                    "is flight-recorder sourced")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="export the run's spans as a Chrome trace-event "
+                    "file (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--trace-jsonl", metavar="FILE", default=None,
+                    help="export the run's spans as raw JSONL, one record "
+                    "per line")
+    ap.add_argument("--metrics", metavar="FILE", default=None,
+                    help="write the pipeline metrics snapshot (counters, "
+                    "gauges, histograms) as JSON")
     args = ap.parse_args()
+
+    trace_requested = bool(
+        args.trace or args.trace_jsonl or args.metrics or args.deltas
+    )
+    if trace_requested:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
 
     cells: list[dict] = []
     print("table,impl,k,c,sim_us,paper_us")
@@ -139,6 +164,21 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(payload['cells'])} cells to {args.json}", flush=True)
+
+    if trace_requested:
+        from repro.obs import metrics as obs_metrics
+        from repro.obs.trace import TRACER
+        if args.trace:
+            TRACER.export_chrome(args.trace)
+            print(f"# wrote Chrome trace ({TRACER.total} spans, "
+                  f"{TRACER.dropped} dropped) to {args.trace}", flush=True)
+        if args.trace_jsonl:
+            TRACER.export_jsonl(args.trace_jsonl)
+            print(f"# wrote trace JSONL to {args.trace_jsonl}", flush=True)
+        if args.metrics:
+            with open(args.metrics, "w") as f:
+                json.dump(obs_metrics.snapshot(), f, indent=1, default=str)
+            print(f"# wrote metrics snapshot to {args.metrics}", flush=True)
 
 
 if __name__ == "__main__":

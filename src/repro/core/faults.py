@@ -232,6 +232,17 @@ def apply_faults(machine: Machine, spec: FaultSpec) -> Machine:
     spec.validate(machine.topo)
     if spec.is_healthy:
         return machine
+    from repro.obs import metrics as obs_metrics
+    from repro.obs.trace import TRACER
+
+    obs_metrics.counter("faults.applied").inc()
+    if TRACER:
+        TRACER.event("faults.apply", fingerprint=spec.fingerprint(),
+                     dead_rails=spec.dead_rails,
+                     dead_lanes=len(spec.dead_lanes),
+                     dead_ranks=len(spec.dead_ranks),
+                     dead_nodes=len(spec.dead_nodes),
+                     derated_links=len(spec.derated_links))
     return FaultedMachine(topo=machine.topo, cost=machine.cost, spec=spec)
 
 

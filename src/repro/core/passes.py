@@ -185,6 +185,8 @@ from repro.core.validate import (
     validate_schedule,
     window_hop_fraction,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
 
 __all__ = [
     "ReorderRounds",
@@ -1292,14 +1294,30 @@ class RepairSchedule:
                     )
                 via_src = np.where(need_src, proxy[cs.src // n], -1)
                 via_dst = np.where(need_dst, proxy[cs.dst // n], -1)
+                rsp = TRACER.start(
+                    "repair.relay",
+                    relayed_src=int(need_src.sum()),
+                    relayed_dst=int(need_dst.sum()),
+                ) if TRACER else None
                 cs = relay_messages(cs, via_src, via_dst)
+                if rsp:
+                    TRACER.finish(rsp, msgs_after=cs.num_msgs)
+                obs_metrics.counter("repair.relayed_msgs").inc(
+                    int(need_src.sum()) + int(need_dst.sum())
+                )
                 relayed = True
 
         # reduced per-node port budget: the narrowest surviving lane count
         alive_lanes = deg.lanes[~deg.dead_node]
         k_eff = max(1, int(alive_lanes.min())) if alive_lanes.size else 1
         if relayed or cs.max_port_width() > k_eff:
+            trigger = "relayed" if relayed else "overwidth"
+            psp = TRACER.start("repair.repack", k_eff=k_eff,
+                               trigger=trigger) if TRACER else None
             cs = ColorRounds(limit=k_eff, procs_per_node=n).apply(cs)
+            if psp:
+                TRACER.finish(psp, rounds_after=cs.num_rounds)
+            obs_metrics.counter("repair.repacks").inc()
         return cs
 
 
@@ -1330,9 +1348,14 @@ def repair_schedule(
         raise ValueError("repair_schedule needs topo= or machine=")
     ps = RepairSchedule(spec, topo=topo)
     t0 = time.perf_counter()
+    sp = TRACER.start("repair", fingerprint=spec.fingerprint()) if TRACER \
+        else None
     try:
         new = ps.apply(cs)
     except UnrepairableFaultError:
+        obs_metrics.counter("repair.reverted").inc()
+        if sp:
+            TRACER.finish(sp, applied=False, outcome="unrepairable")
         return cs, [
             PassRecord(
                 name=ps.name,
@@ -1347,11 +1370,30 @@ def repair_schedule(
                 oracle_ok=None,
             )
         ]
+    except BaseException:
+        if sp:
+            TRACER.finish(sp, applied=False, outcome="error")
+        raise
     ok = None
     if validate and new is not cs:
+        osp = TRACER.start("repair.oracle") if TRACER else None
+        tv = time.perf_counter()
         report = validate_schedule(new)
+        obs_metrics.counter("repair.oracle_checks").inc()
+        obs_metrics.gauge("repair.last_oracle_verify_s").set(
+            time.perf_counter() - tv
+        )
         ok = report.ok
+        if osp:
+            TRACER.finish(osp, ok=ok)
+        if not ok and sp:
+            TRACER.finish(sp, applied=False, outcome="oracle_violation")
         report.raise_if_invalid()
+    obs_metrics.counter("repair.applied" if new is not cs
+                        else "repair.noop").inc()
+    if sp:
+        TRACER.finish(sp, applied=new is not cs, outcome="ok",
+                      rounds_after=new.num_rounds, msgs_after=new.num_msgs)
     return new, [
         PassRecord(
             name=ps.name,
@@ -1479,6 +1521,8 @@ class PassManager:
         diff is window-confined and small and the input is known-valid.
         Returns ``(report, prev_ok)`` (``prev_ok`` memoizes the lazy input
         validation across passes: None = not yet checked)."""
+        sp = TRACER.start("oracle") if TRACER else None
+        mode = "full"
         if self.incremental and prev_ok is not False:
             window = rewrite_window(cs, new)
             if (
@@ -1488,37 +1532,71 @@ class PassManager:
                 if prev_ok is None:
                     prev_ok = validate_schedule(cs).ok
                 if prev_ok:
-                    return (
-                        revalidate_schedule(new, prev=cs, window=window),
-                        prev_ok,
-                    )
-        return validate_schedule(new), prev_ok
+                    mode = "incremental"
+                    report = revalidate_schedule(new, prev=cs, window=window)
+        if mode == "full":
+            report = validate_schedule(new)
+        obs_metrics.counter(f"oracle.{mode}").inc()
+        if sp:
+            TRACER.finish(sp, mode=mode, ok=report.ok)
+        return report, prev_ok
 
     def run(
         self, cs: CompiledSchedule
     ) -> tuple[CompiledSchedule, list[PassRecord]]:
         records: list[PassRecord] = []
+        run_sp = TRACER.start(
+            "optimize",
+            passes=[getattr(ps, "name", type(ps).__name__) for ps in self.passes],
+            policy=self.policy, fixpoint=self.fixpoint,
+            incremental=self.incremental,
+        ) if TRACER else None
+        try:
+            cs, records = self._run_inner(cs, records)
+        except BaseException:
+            if run_sp:
+                TRACER.finish(run_sp, outcome="error")
+            raise
+        if run_sp:
+            TRACER.finish(
+                run_sp, outcome="ok", sweeps=records[-1].iteration + 1
+                if records else 0,
+                applied=sum(1 for r in records if r.applied),
+            )
+        return cs, records
+
+    def _run_inner(
+        self, cs: CompiledSchedule, records: list[PassRecord]
+    ) -> tuple[CompiledSchedule, list[PassRecord]]:
         t_cur = self._time(cs)
         prev_ok: bool | None = None  # lazy input validity, for incremental
         sweeps = self.max_iters if self.fixpoint else 1
         for it in range(sweeps):
             progressed = False
             for ps in self.passes:
+                name = getattr(ps, "name", type(ps).__name__)
+                sp = TRACER.start(f"pass:{name}", iteration=it) if TRACER \
+                    else None
                 t0 = time.perf_counter()
-                new = ps.apply(cs)
-                changed = new is not cs
-                ok = None
-                if changed and (self.validate or self.check):
-                    report, prev_ok = self._check(cs, new, prev_ok)
-                    ok = report.ok
-                    if not ok and not self.check:
-                        report.raise_if_invalid()
-                if ok is False:
-                    t_new = None  # corrupt rewrite: never timed
-                elif not changed:
-                    t_new = t_cur  # identity result: skip the re-simulation
-                else:
-                    t_new = self._time(new)
+                try:
+                    new = ps.apply(cs)
+                    changed = new is not cs
+                    ok = None
+                    if changed and (self.validate or self.check):
+                        report, prev_ok = self._check(cs, new, prev_ok)
+                        ok = report.ok
+                        if not ok and not self.check:
+                            report.raise_if_invalid()
+                    if ok is False:
+                        t_new = None  # corrupt rewrite: never timed
+                    elif not changed:
+                        t_new = t_cur  # identity result: skip re-simulation
+                    else:
+                        t_new = self._time(new)
+                except BaseException:
+                    if sp:
+                        TRACER.finish(sp, outcome="error")
+                    raise
                 if ok is False:
                     keep = False
                 elif self.policy == "always":
@@ -1527,9 +1605,25 @@ class PassManager:
                     keep = t_new <= t_cur
                 else:  # lex
                     keep = self._lex_better(t_new, new, t_cur, cs)
+                if changed and not keep:
+                    # reverted rewrite: either the oracle caught corruption
+                    # (check=True) or the policy rejected the trade
+                    reason = "oracle" if ok is False else "policy"
+                    obs_metrics.counter(f"passes.reverted.{reason}").inc()
+                    if TRACER:
+                        TRACER.event("pass.revert", pass_name=name,
+                                     reason=reason)
+                if sp:
+                    TRACER.finish(
+                        sp, applied=keep, changed=changed,
+                        rounds_before=cs.num_rounds, rounds_after=new.num_rounds,
+                        msgs_before=cs.num_msgs, msgs_after=new.num_msgs,
+                        time_before_us=t_cur, time_after_us=t_new,
+                        oracle_ok=ok,
+                    )
                 records.append(
                     PassRecord(
-                        name=getattr(ps, "name", type(ps).__name__),
+                        name=name,
                         applied=keep,
                         rounds_before=cs.num_rounds,
                         rounds_after=new.num_rounds,

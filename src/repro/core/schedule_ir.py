@@ -75,6 +75,8 @@ import numpy as np
 
 from repro.core import schedule as sched
 from repro.core.topology import Topology
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
 
 __all__ = [
     "CompiledSchedule",
@@ -93,6 +95,7 @@ __all__ = [
     "compiled_schedule",
     "schedule_cache_info",
     "schedule_cache_clear",
+    "schedule_cache_reset",
 ]
 
 
@@ -898,33 +901,32 @@ def compiled_schedule(
         hit = _CACHE.get(key)
         if hit is not None:
             _CACHE_HITS += 1
-            return hit
-        _CACHE_MISSES += 1
+        else:
+            _CACHE_MISSES += 1
+    if hit is not None:
+        obs_metrics.counter("schedule_cache.hits").inc()
+        if TRACER:
+            TRACER.event("cache.hit", op=op, algorithm=algorithm,
+                         optimize=optimize, c=c, fault_fp=fault_fp)
+        return hit
+    obs_metrics.counter("schedule_cache.misses").inc()
     if root != 0:
         raise ValueError("the ALGORITHMS registry generates root=0 schedules")
-    if fault_fp is not None:
-        # repair is a rewrite of the healthy entry (which stays cached and
-        # reusable for other fault sets), never a regeneration
-        base = compiled_schedule(op, algorithm, topo, k, c, root,
-                                 optimize=optimize)
-        from repro.core.passes import repair_schedule
-
-        cs, _ = repair_schedule(base, faults, topo=topo)
-    elif optimize is not None:
-        base = compiled_schedule(op, algorithm, topo, k, c, root)
-        if all(getattr(ps, "recipe_safe", False) for ps in passes):
-            cs = _optimize_via_recipe(base, key[:6] + key[7:], passes)
-        else:
-            from repro.core.passes import optimize_schedule
-
-            cs, _ = optimize_schedule(base, optimize, topo=topo, validate=True)
-    else:
-        gen = IR_GENERATORS.get((op, algorithm))
-        if gen is not None:
-            cs = gen(topo, k, c)
-        else:
-            legacy = sched.ALGORITHMS[(op, algorithm)](topo, k, c)
-            cs = compile_schedule(legacy, with_blocks=True)
+    sp = TRACER.start(
+        "compile", op=op, algorithm=algorithm, nodes=topo.num_nodes,
+        ppn=topo.procs_per_node, lanes=topo.k_lanes, k=k, c=c,
+        optimize=optimize, fingerprint=fingerprint, fault_fp=fault_fp,
+    ) if TRACER else None
+    try:
+        cs, path = _build_entry(op, algorithm, topo, k, c, root,
+                                optimize=optimize, faults=faults,
+                                fault_fp=fault_fp, passes=passes, key=key)
+    except BaseException:
+        if sp:
+            TRACER.finish(sp, path="error")
+        raise
+    if sp:
+        TRACER.finish(sp, path=path, rounds=cs.num_rounds, msgs=cs.num_msgs)
     new_bytes = _entry_bytes(cs)
     with _LOCK:
         while _CACHE and (
@@ -934,6 +936,34 @@ def compiled_schedule(
             _CACHE.pop(next(iter(_CACHE)))
         _CACHE[key] = cs
     return cs
+
+
+def _build_entry(op, algorithm, topo, k, c, root, *, optimize, faults,
+                 fault_fp, passes, key) -> tuple[CompiledSchedule, str]:
+    """The cache-miss build path of :func:`compiled_schedule`, factored out
+    so the compile trace span has a single open/close boundary."""
+    if fault_fp is not None:
+        # repair is a rewrite of the healthy entry (which stays cached and
+        # reusable for other fault sets), never a regeneration
+        base = compiled_schedule(op, algorithm, topo, k, c, root,
+                                 optimize=optimize)
+        from repro.core.passes import repair_schedule
+
+        cs, _ = repair_schedule(base, faults, topo=topo)
+        return cs, "repair"
+    if optimize is not None:
+        base = compiled_schedule(op, algorithm, topo, k, c, root)
+        if all(getattr(ps, "recipe_safe", False) for ps in passes):
+            return _optimize_via_recipe(base, key[:6] + key[7:], passes), "recipe"
+        from repro.core.passes import optimize_schedule
+
+        cs, _ = optimize_schedule(base, optimize, topo=topo, validate=True)
+        return cs, "optimize"
+    gen = IR_GENERATORS.get((op, algorithm))
+    if gen is not None:
+        return gen(topo, k, c), "generate"
+    legacy = sched.ALGORITHMS[(op, algorithm)](topo, k, c)
+    return compile_schedule(legacy, with_blocks=True), "compile_legacy"
 
 
 def _optimize_via_recipe(
@@ -952,10 +982,19 @@ def _optimize_via_recipe(
     from repro.core.passes import PassManager
     from repro.core.validate import validate_schedule
 
+    # counter updates stay inside _LOCK: plain += on module globals is a
+    # read-modify-write and concurrent recipe replays would lose increments
+    # (the cache counters above already do this; these were racy until ISSUE 7)
     with _LOCK:
         rec = _RECIPES.get(recipe_key)
+        if rec is None:
+            _RECIPE_MISSES += 1
+        else:
+            _RECIPE_HITS += 1
     if rec is None:
-        _RECIPE_MISSES += 1
+        obs_metrics.counter("schedule_recipes.misses").inc()
+        if TRACER:
+            TRACER.event("recipe.miss", op=recipe_key[0], algorithm=recipe_key[1])
         tagged = dataclasses.replace(
             base,
             elems=np.arange(base.num_msgs, dtype=np.int64),
@@ -975,7 +1014,10 @@ def _optimize_via_recipe(
         with _LOCK:
             rec = _RECIPES.setdefault(recipe_key, rec)
     else:
-        _RECIPE_HITS += 1
+        obs_metrics.counter("schedule_recipes.hits").inc()
+        if TRACER:
+            TRACER.event("recipe.replay", op=recipe_key[0],
+                         algorithm=recipe_key[1])
     if rec["identity"]:
         return base
     morder = rec["morder"]
@@ -991,7 +1033,12 @@ def _optimize_via_recipe(
         _stats={},
     )
     if not rec["validated"]:
-        validate_schedule(cs).raise_if_invalid()
+        osp = TRACER.start("oracle", mode="full", where="recipe") if TRACER \
+            else None
+        report = validate_schedule(cs)
+        if osp:
+            TRACER.finish(osp, ok=report.ok)
+        report.raise_if_invalid()
         rec["validated"] = True
     return cs
 
@@ -1014,10 +1061,24 @@ def schedule_cache_info() -> dict:
 
 
 def schedule_cache_clear() -> None:
+    """Drop every cached entry and recipe, and zero the counters."""
     global _CACHE_HITS, _CACHE_MISSES, _RECIPE_HITS, _RECIPE_MISSES
     with _LOCK:
         _CACHE.clear()
         _RECIPES.clear()
+        _CACHE_HITS = 0
+        _CACHE_MISSES = 0
+        _RECIPE_HITS = 0
+        _RECIPE_MISSES = 0
+
+
+def schedule_cache_reset() -> None:
+    """Zero the hit/miss counters while *keeping* cached entries and
+    recipes — the ``schedule_cache_info`` counterpart for measuring the
+    hit rate of one workload window without cold-starting the cache
+    (``schedule_cache_clear`` drops the entries too)."""
+    global _CACHE_HITS, _CACHE_MISSES, _RECIPE_HITS, _RECIPE_MISSES
+    with _LOCK:
         _CACHE_HITS = 0
         _CACHE_MISSES = 0
         _RECIPE_HITS = 0

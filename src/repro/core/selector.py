@@ -48,14 +48,21 @@ import functools
 import math
 import time
 
+import threading
+
 from repro.core.faults import FaultSpec, apply_faults
 from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
 from repro.core.topology import Machine, Topology, tpu_v5e_machine
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
 
 __all__ = [
     "select",
     "Choice",
+    "CandidateRecord",
+    "Decision",
+    "last_decision",
     "crossover_table",
     "affine_cost",
     "piecewise_cost",
@@ -69,6 +76,76 @@ class Choice:
     algorithm: str
     est_us: float
     candidates: tuple[tuple[str, float], ...]  # (algorithm, est_us), sorted
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateRecord:
+    """One raced candidate inside a :class:`Decision`.
+
+    ``status`` says what happened to it — the distinction the chaos report
+    needs between a price-out and a deadline skip:
+
+    * ``"priced"`` — simulated; ``est_us`` holds the price (may be ``inf``
+      for an unrepairable-but-returned degraded schedule);
+    * ``"unavailable"`` — the family does not generate on this mesh;
+    * ``"deadline-skipped"`` — an ``opt:`` candidate never raced because
+      the deadline had already expired;
+    * ``"oracle-rejected"`` — the degraded rewrite failed oracle
+      validation and fell down the ladder (faulted runs only).
+    """
+
+    algorithm: str
+    rung: str  # "base" | "opt"
+    status: str
+    est_us: float | None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Full record of one selection race (``select(..., explain=True)``).
+
+    Names every candidate with its price and fate, which fallback rung
+    produced the winner (``"raced"`` — a normal race — or
+    ``"final-fallback"`` — every candidate failed to price and the first
+    generatable base family shipped at ``inf``), the winner's margin over
+    the runner-up, and the probe count/wall the race cost."""
+
+    op: str
+    payload_elems: int
+    num_nodes: int
+    procs_per_node: int
+    k_lanes: int
+    faults_fp: str | None
+    deadline_s: float | None
+    candidates: tuple[CandidateRecord, ...]
+    winner: str
+    est_us: float
+    margin_us: float | None  # runner-up minus winner; None without one
+    rung_fired: str  # "raced" | "final-fallback"
+    probes: int  # _sim_payload attempts the race made
+    wall_s: float
+    choice: Choice
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["choice"] = dataclasses.asdict(self.choice)
+        return d
+
+
+_LAST_LOCK = threading.Lock()
+_LAST_DECISION: Decision | None = None
+
+
+def last_decision() -> Decision | None:
+    """The :class:`Decision` from the most recent *uncached* selection race
+    in this process (``explain=True`` calls always race; plain ``select``
+    races once per distinct argument tuple and then serves its lru cache,
+    which does not refresh this)."""
+    with _LAST_LOCK:
+        return _LAST_DECISION
 
 
 def _proxy_machine(machine: Machine, max_n: int = 16) -> tuple[Machine, float]:
@@ -170,7 +247,6 @@ def _sim_payload(
     return simulate(cs, proxy).time_us
 
 
-@functools.lru_cache(maxsize=4096)
 def select(
     op: str,
     payload_elems: int,
@@ -180,7 +256,8 @@ def select(
     k_lanes: int = 8,
     faults: FaultSpec | None = None,
     deadline_s: float | None = None,
-) -> Choice:
+    explain: bool = False,
+) -> Choice | Decision:
     """Pick the cheapest algorithm family for ``op`` at ``payload_elems``
     (total payload for broadcast; per-proc block for scatter; per-pair block
     for alltoall) on the given (node, lane) machine shape.
@@ -201,15 +278,61 @@ def select(
     A reverted repair (e.g. a dead node) prices at ``inf`` on the degraded
     machine, so it ranks behind any actually-runnable candidate but still
     satisfies "always returns a schedule" for the elastic layer to act on.
+
+    **Observability** (ISSUE 7): ``explain=True`` returns the full
+    :class:`Decision` record — every raced candidate with its price and
+    fate, the winner's margin, which rung fired, probe count and wall —
+    instead of the bare :class:`Choice` (read it as ``decision.choice``).
+    ``explain`` runs bypass the selection cache so the record reflects
+    *this* race (the underlying ``_sim_payload`` probes stay cached, so
+    a repeat explain is cheap); plain calls are cached per argument tuple
+    as before.  :func:`last_decision` returns the record of the most
+    recent uncached race either way.
     """
+    if explain:
+        return _select_impl(op, payload_elems, num_nodes, procs_per_node,
+                            k_lanes, faults, deadline_s)
+    return _select_cached(op, payload_elems, num_nodes, procs_per_node,
+                          k_lanes, faults, deadline_s)
+
+
+@functools.lru_cache(maxsize=4096)
+def _select_cached(
+    op: str,
+    payload_elems: int,
+    num_nodes: int,
+    procs_per_node: int,
+    k_lanes: int,
+    faults: FaultSpec | None,
+    deadline_s: float | None,
+) -> Choice:
+    return _select_impl(op, payload_elems, num_nodes, procs_per_node,
+                        k_lanes, faults, deadline_s).choice
+
+
+def _select_impl(
+    op: str,
+    payload_elems: int,
+    num_nodes: int,
+    procs_per_node: int,
+    k_lanes: int,
+    faults: FaultSpec | None,
+    deadline_s: float | None,
+) -> Decision:
+    global _LAST_DECISION
     if faults is not None and faults.is_healthy:
         faults = None
+    faults_fp = faults.fingerprint() if faults is not None else None
     machine = _machine_for(num_nodes, procs_per_node, k_lanes)
     if faults is not None:
         race_topo = machine.topo  # fault indices address the real topology
     else:
         race_topo = _proxy_machine(machine)[0].topo
+    sp = TRACER.start("select", op=op, payload_elems=payload_elems,
+                      faults_fp=faults_fp, deadline_s=deadline_s) if TRACER \
+        else None
     t0 = time.monotonic()
+    wall0 = time.perf_counter()
 
     def expired() -> bool:
         return deadline_s is not None and time.monotonic() - t0 >= deadline_s
@@ -218,15 +341,26 @@ def select(
     base_algs = [a for a in algs if not a.startswith("opt:")]
     opt_algs = [a for a in algs if a.startswith("opt:")]
 
+    recs: list[CandidateRecord] = []
+    probes = 0
     candidates: dict[str, float] = {}
     for alg in base_algs:  # the guaranteed rung: never deadline-gated
+        probes += 1
         t = _sim_payload(op, alg, payload_elems, num_nodes, procs_per_node,
                          k_lanes, faults)
         if t is not None:
             candidates[alg] = t
+        recs.append(CandidateRecord(
+            algorithm=alg, rung="base",
+            status="priced" if t is not None else "unavailable", est_us=t))
     for alg in opt_algs:  # the expensive rung: only while under deadline
         if expired():
-            break
+            recs.append(CandidateRecord(
+                algorithm=alg, rung="opt", status="deadline-skipped",
+                est_us=None))
+            continue
+        probes += 1
+        status = "priced"
         try:
             t = _sim_payload(op, alg, payload_elems, num_nodes,
                              procs_per_node, k_lanes, faults)
@@ -234,27 +368,64 @@ def select(
             if faults is None:
                 raise  # healthy opt: oracle failure is a bug, not a mode
             t = None  # degraded rewrite rejected — fall down the ladder
+            status = "oracle-rejected"
         if t is not None:
             candidates[alg] = t
+        elif status == "priced":
+            status = "unavailable"
+        recs.append(CandidateRecord(algorithm=alg, rung="opt",
+                                    status=status, est_us=t))
 
     if not candidates:
         # final rung: return the first family that generates at all
         k = min(race_topo.k_lanes, race_topo.procs_per_node)
         c = payload_elems if op == "broadcast" else max(1, payload_elems)
+        choice = None
         for alg in base_algs:
             try:
                 compiled_schedule(op, alg, race_topo, k, c, faults=faults)
             except Exception:
                 continue
-            return Choice(op=op, algorithm=alg, est_us=float("inf"),
-                          candidates=((alg, float("inf")),))
-        raise RuntimeError(
-            f"no {op} family generates on {race_topo} — topology unusable"
+            choice = Choice(op=op, algorithm=alg, est_us=float("inf"),
+                            candidates=((alg, float("inf")),))
+            break
+        if choice is None:
+            if sp:
+                TRACER.finish(sp, outcome="unusable")
+            raise RuntimeError(
+                f"no {op} family generates on {race_topo} — topology unusable"
+            )
+        decision = Decision(
+            op=op, payload_elems=payload_elems, num_nodes=num_nodes,
+            procs_per_node=procs_per_node, k_lanes=k_lanes,
+            faults_fp=faults_fp, deadline_s=deadline_s,
+            candidates=tuple(recs), winner=choice.algorithm,
+            est_us=choice.est_us, margin_us=None,
+            rung_fired="final-fallback", probes=probes,
+            wall_s=time.perf_counter() - wall0, choice=choice,
         )
-
-    ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
-    best, est = ranked[0]
-    return Choice(op=op, algorithm=best, est_us=est, candidates=ranked)
+    else:
+        ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
+        best, est = ranked[0]
+        choice = Choice(op=op, algorithm=best, est_us=est, candidates=ranked)
+        decision = Decision(
+            op=op, payload_elems=payload_elems, num_nodes=num_nodes,
+            procs_per_node=procs_per_node, k_lanes=k_lanes,
+            faults_fp=faults_fp, deadline_s=deadline_s,
+            candidates=tuple(recs), winner=best, est_us=est,
+            margin_us=ranked[1][1] - est if len(ranked) > 1 else None,
+            rung_fired="raced", probes=probes,
+            wall_s=time.perf_counter() - wall0, choice=choice,
+        )
+    obs_metrics.counter("selector.races").inc()
+    obs_metrics.counter(f"selector.rung.{decision.rung_fired}").inc()
+    if sp:
+        TRACER.finish(sp, winner=decision.winner, est_us=decision.est_us,
+                      rung_fired=decision.rung_fired, probes=probes,
+                      margin_us=decision.margin_us)
+    with _LAST_LOCK:
+        _LAST_DECISION = decision
+    return decision
 
 
 @functools.lru_cache(maxsize=4096)

@@ -80,6 +80,14 @@ class ValidationReport:
 
     def raise_if_invalid(self) -> "ValidationReport":
         if not self.ok:
+            # Failure forensics (ISSUE 7): when armed (forensics.enable or
+            # REPRO_FORENSICS), dump the flight recorder + metrics before
+            # raising so chaos/CI oracle violations are diagnosable
+            # post-mortem.  Unarmed (the default — including the test
+            # suite's intentional-corruption checks) this is a no-op.
+            from repro.obs.forensics import auto_dump
+
+            auto_dump("oracle_violation", extra=dataclasses.asdict(self))
             raise AssertionError(
                 f"invalid {self.op}/{self.algorithm} schedule: "
                 f"{self.causality_violations} causality violation(s) "

@@ -1,0 +1,31 @@
+"""Observability subsystem (ISSUE 7): flight recorder for the schedule
+pipeline.
+
+Zero new dependencies (numpy only, like the core), three modules:
+
+* :mod:`repro.obs.trace` — nested spans on the monotonic clock, recorded
+  into a process-wide ring-buffer **flight recorder**, exportable as JSONL
+  or Chrome trace-event JSON (loadable in Perfetto / ``chrome://tracing``).
+  Disabled by default; every instrumentation point in the pipeline guards
+  on a single truthiness check (``if TRACER:``), so the disabled fast path
+  costs one pointer test per site.
+* :mod:`repro.obs.metrics` — process-wide counters, gauges, and
+  fixed-bucket histograms (array-native bucket counts, no per-event
+  allocation), with a one-call text/JSON snapshot.  Always on: the
+  instrumented sites are per-pass / per-compile / per-decode-step, never
+  per-message.
+* :mod:`repro.obs.forensics` — failure forensics: dump the flight
+  recorder + metrics snapshot to a ``*.forensics.json`` artifact.  The
+  oracle's ``raise_if_invalid`` auto-dumps through here when forensics is
+  armed (:func:`repro.obs.forensics.enable` or ``REPRO_FORENSICS=dir``),
+  so a chaos or CI failure leaves a diagnosable record of the pipeline
+  state that produced it.
+
+See the ROADMAP "Observability runbook" for how to enable tracing, read a
+selector decision record, open a Perfetto trace, and interpret a
+forensics dump.
+"""
+
+from repro.obs import forensics, metrics, trace
+
+__all__ = ["trace", "metrics", "forensics"]

@@ -26,8 +26,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
 
 __all__ = ["Request", "ServeEngine", "greedy_sample", "temperature_sample"]
+
+#: decode-step latency buckets (seconds): 100us .. 10s geometric — jit
+#: warm-up lands in the top buckets, steady-state decode in the middle.
+_STEP_EDGES = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 10.0)
 
 
 @dataclasses.dataclass
@@ -150,6 +156,11 @@ class ServeEngine:
         else:
             action = "evict" if getattr(event, "kind", "node") == "node" else "warn"
         self.monitor_actions.append(action)
+        obs_metrics.counter("engine.fault_events").inc()
+        obs_metrics.counter(f"engine.fault_action.{action}").inc()
+        if TRACER:
+            TRACER.event("engine.fault", kind=getattr(event, "kind", None),
+                         action=action)
         return action
 
     def drain(self) -> list[Request]:
@@ -177,10 +188,17 @@ class ServeEngine:
             if pending and any(s is None for s in self.slots) and self.cache is None:
                 n = self.admit(pending)
                 pending = pending[len(n):]
+            sp = TRACER.start("decode_step", step=steps) if TRACER else None
             t0 = time.perf_counter()
             self.step()
+            dt = time.perf_counter() - t0
+            if sp:
+                TRACER.finish(sp, pos=self.pos)
+            obs_metrics.histogram(
+                "engine.step_latency_s", edges=_STEP_EDGES
+            ).observe(dt)
             if self.monitor is not None:
-                action = self.monitor.observe(time.perf_counter() - t0)
+                action = self.monitor.observe(dt)
                 self.monitor_actions.append(action)
                 if action == "evict":
                     break

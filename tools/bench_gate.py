@@ -79,6 +79,27 @@ def load_cells(path: str) -> tuple[dict[tuple, dict], list[str]]:
     return cells, bad
 
 
+def _dump_forensics(failures: list[str], args) -> None:
+    """Best-effort failure forensics (ISSUE 7): a gate failure dumps the
+    flight recorder + metrics snapshot next to the fresh trajectory so the
+    CI artifact explains *what ran* before the regression.  Guarded: the
+    gate must keep working standalone (no PYTHONPATH=src) and a forensics
+    error must never mask the gate verdict."""
+    try:
+        from repro.obs import forensics
+    except ImportError:
+        return
+    try:
+        path = forensics.dump(
+            "bench_gate_failure",
+            extra={"failures": failures, "fresh": args.fresh,
+                   "baseline": args.baseline},
+        )
+        print(f"bench_gate: forensics dump written to {path}")
+    except Exception as e:  # pragma: no cover - best-effort by contract
+        print(f"bench_gate: forensics dump failed ({e!r})")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail when the fresh BENCH trajectory regresses the "
@@ -200,6 +221,7 @@ def main(argv=None) -> int:
             f"`python tools/bench_gate.py {args.fresh} --update-baseline` "
             "and commit the baseline"
         )
+        _dump_forensics(failures, args)
         return 1
     print("bench_gate: OK — trajectory within tolerance")
     return 0

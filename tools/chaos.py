@@ -32,7 +32,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import shutil
 import sys
+import tempfile
 
 import numpy as np
 
@@ -47,6 +50,7 @@ from repro.core.selector import select
 from repro.core.simulate import simulate
 from repro.core.topology import HYDRA, NVLINK_IB, Machine, Topology
 from repro.core.validate import check_schedule
+from repro.obs import forensics, trace
 
 ALLTOALL_FAMILIES = ("kported", "bruck", "klane", "fulllane")
 
@@ -144,29 +148,46 @@ def run_schedule_chaos(
                 cells.append(cell)
 
     # selector ladder under each scenario: must always return a choice,
-    # and deadline 0 must skip every opt: candidate
+    # and deadline 0 must skip every opt: candidate.  Each drill embeds the
+    # full decision record (ISSUE 7 satellite) — which rung fired and the
+    # per-candidate fate, so a report distinguishes a deadline-skip from a
+    # price-out instead of just showing the surviving winner.
     ladder = []
     for sname, spec in specs.items():
-        ch = select(
+        dec = select(
             "alltoall", 256, num_nodes=num_nodes,
             procs_per_node=procs_per_node, k_lanes=k_lanes, faults=spec,
+            explain=True,
         )
-        ch0 = select(
+        dec0 = select(
             "alltoall", 256, num_nodes=num_nodes,
             procs_per_node=procs_per_node, k_lanes=k_lanes, faults=spec,
-            deadline_s=0.0,
+            deadline_s=0.0, explain=True,
         )
+        ch, ch0 = dec.choice, dec0.choice
         lcell = {
             "scenario": sname,
             "choice": ch.algorithm,
             "est_us": None if np.isinf(ch.est_us) else round(ch.est_us, 3),
             "base_rung_choice": ch0.algorithm,
+            "decision": _decision_cell(dec),
+            "decision_deadline0": _decision_cell(dec0),
             "contract_ok": bool(
-                ch.algorithm and not ch0.algorithm.startswith("opt:")
+                ch.algorithm
+                and not ch0.algorithm.startswith("opt:")
+                # the deadline-0 race must record WHY no opt: ran
+                and all(c["status"] == "deadline-skipped"
+                        for c in _decision_cell(dec0)["candidates"]
+                        if c["rung"] == "opt")
             ),
         }
         ok &= lcell["contract_ok"]
         ladder.append(lcell)
+
+    drill = run_forensics_drill(
+        num_nodes=num_nodes, procs_per_node=procs_per_node, k_lanes=k_lanes
+    )
+    ok &= drill["contract_ok"]
 
     return {
         "kind": "schedule_chaos",
@@ -174,7 +195,81 @@ def run_schedule_chaos(
         "topology": dataclasses.asdict(topo),
         "cells": cells,
         "selector_ladder": ladder,
+        "forensics_drill": drill,
         "ok": bool(ok),
+    }
+
+
+def _decision_cell(dec) -> dict:
+    """JSON-ready, *deterministic* subset of a selector Decision (the
+    report must replay byte-identical across CI runs, so wall_s stays
+    out)."""
+    return {
+        "winner": dec.winner,
+        "rung_fired": dec.rung_fired,
+        "probes": dec.probes,
+        "candidates": [
+            {
+                "algorithm": c.algorithm,
+                "rung": c.rung,
+                "status": c.status,
+                "est_us": (
+                    None if c.est_us is None or np.isinf(c.est_us)
+                    else round(c.est_us, 3)
+                ),
+            }
+            for c in dec.candidates
+        ],
+    }
+
+
+def run_forensics_drill(
+    *, num_nodes: int, procs_per_node: int, k_lanes: int
+) -> dict:
+    """Force an oracle violation with forensics armed and verify the dump
+    (ISSUE 7 acceptance): corrupt a round-0 message's block CSR so its
+    sender provably never held the block, run ``check_schedule``, and
+    check the raised violation left a loadable ``*.forensics.json`` with
+    the flight recorder and metrics snapshot inside."""
+    topo = Topology(num_nodes, procs_per_node, k_lanes)
+    cs = compiled_schedule("alltoall", "klane", topo, topo.k_lanes, 2)
+    bad_blk = cs.blk_ids.copy()
+    src0 = int(cs.src[0])
+    # round-0 senders hold only their own pair blocks (src*p + *); a block
+    # rooted at another proc is a guaranteed causality violation
+    bad_blk[cs.blk_ptr[0]] = ((src0 + 1) % cs.p) * cs.p
+    bad = dataclasses.replace(cs, blk_ids=bad_blk, _stats={})
+    tmp = tempfile.mkdtemp(prefix="chaos_forensics_")
+    forensics.enable(tmp)
+    raised = False
+    try:
+        check_schedule(bad, raise_on_error=True)
+    except AssertionError:
+        raised = True
+    finally:
+        forensics.disable()
+    dumps = sorted(os.listdir(tmp))
+    dump_ok, dump_name = False, None
+    if dumps:
+        dump_name = dumps[0]
+        try:
+            with open(os.path.join(tmp, dump_name)) as f:
+                doc = json.load(f)
+            dump_ok = (
+                doc.get("reason") == "oracle_violation"
+                and "records" in doc.get("trace", {})
+                and isinstance(doc.get("metrics"), dict)
+                and doc.get("extra", {}).get("ok") is False
+            )
+        except (OSError, ValueError):
+            dump_ok = False
+    shutil.rmtree(tmp, ignore_errors=True)
+    return {
+        "kind": "forensics_drill",
+        "raised": raised,
+        "dump": dump_name,
+        "dump_ok": dump_ok,
+        "contract_ok": bool(raised and dump_ok),
     }
 
 
@@ -271,6 +366,9 @@ def main(argv=None) -> int:
     )
     args = ap.parse_args(argv)
 
+    # the chaos run is always traced (ISSUE 7): the flight recorder is
+    # in-memory and cheap, and a contract breach dumps it via forensics
+    trace.enable()
     report = run_schedule_chaos(
         seed=args.seed, num_nodes=args.nodes, procs_per_node=args.procs,
         k_lanes=args.lanes, payload=args.payload,
@@ -288,7 +386,9 @@ def main(argv=None) -> int:
     n_bad = sum(not c["contract_ok"] for c in report["cells"])
     print(
         f"chaos: {n_cells} repair cells ({n_bad} contract breaches), "
-        f"{len(report['selector_ladder'])} ladder scenarios"
+        f"{len(report['selector_ladder'])} ladder scenarios, "
+        f"forensics drill "
+        f"{'ok' if report['forensics_drill']['contract_ok'] else 'FAILED'}"
         + (f", engine ok={reports[1]['ok']}" if args.engine else "")
     )
     if not ok:
@@ -299,7 +399,16 @@ def main(argv=None) -> int:
             for c in r.get("selector_ladder", []):
                 if not c["contract_ok"]:
                     print(f"chaos: FAIL — ladder {c}")
+            d = r.get("forensics_drill")
+            if d and not d["contract_ok"]:
+                print(f"chaos: FAIL — forensics drill {d}")
         print("chaos: FAIL")
+        dump = forensics.dump(
+            "chaos_failure",
+            extra={"breaches": [c for c in report["cells"]
+                                if not c["contract_ok"]]},
+        )
+        print(f"chaos: forensics dump written to {dump}")
         return 1
     print("chaos: OK — every fault scenario repaired or reverted per contract")
     return 0

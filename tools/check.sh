@@ -57,7 +57,8 @@ else
         tests/test_reorder_split.py \
         tests/test_color_pack.py \
         tests/test_issue5.py \
-        tests/test_faults.py
+        tests/test_faults.py \
+        tests/test_obs.py
 fi
 
 # lint (CI-fast-job parity): ruff when installed, else a compile check.
@@ -65,9 +66,9 @@ fi
 # CHECK_SKIP_LINT=1 to avoid linting the same paths twice.
 if [[ "${CHECK_SKIP_LINT:-0}" != "1" ]]; then
     if command -v ruff >/dev/null 2>&1; then
-        ruff check src/repro/core tools
+        ruff check src/repro/core src/repro/obs tools
     else
-        python -m compileall -q src/repro/core tools
+        python -m compileall -q src/repro/core src/repro/obs tools
     fi
 fi
 
@@ -80,8 +81,19 @@ run_step "chaos-smoke" python -m tools.chaos --seed 0 \
 # paper-scale OPT smoke (ISSUE 5 CI satellite): a single p=1152 alltoall
 # cell through the full optimize-validate pipeline, CHECK_TIMEOUT-bounded,
 # so the optimizer's scalability cannot silently regress in the fast job.
+# ISSUE 7: the smoke runs traced and exports the flight recorder (Chrome
+# trace + JSONL) and the metrics snapshot — CI uploads all three.
 run_step "paper-opt-smoke" bash -c \
-    "set -o pipefail; python -m benchmarks.run --only paper-opt | tail -n 5"
+    "set -o pipefail; python -m benchmarks.run --only paper-opt \
+        --trace paper_opt.trace.json --trace-jsonl paper_opt.trace.jsonl \
+        --metrics paper_opt.metrics.json | tail -n 8"
+
+# observability smoke (ISSUE 7 CI satellite): tracer span nesting
+# (compile -> optimize -> pass -> oracle), export validity, selector
+# decision records, metrics counters — plus validation of the paper-opt
+# trace just exported above.
+run_step "obs-smoke" python -m tools.obs_check \
+    --check-trace paper_opt.trace.jsonl
 
 # benchmark smoke -> fresh trajectory + the OPT/OPT2/OPT3 delta table (the
 # delta file is the CI artifact reviewers diff); the gate fails on zero
