@@ -1,0 +1,304 @@
+"""Schedule-as-a-service load test (ISSUE 8): cold compile → persist →
+simulated restart → warm-started concurrent serving.
+
+Four phases, one process:
+
+1. **Cold**: with every cache empty, answer each *distinct* query once
+   through :func:`repro.api.plan` + ``Plan.schedule()`` — the compile
+   wall a fresh server pays with no store.
+2. **Persist + restart**: snapshot the process cache into an
+   :class:`~repro.store.ArtifactStore`, then ``schedule_cache_clear()``
+   + ``selector_cache_reset()`` — the process now remembers nothing.
+3. **Warm start**: ``store.warm_start()`` reloads every artifact, then
+   ``schedule_cache_reset()`` zeroes the counters so the serving window
+   is measured alone.
+4. **Serve**: N threads draw ``total`` mixed queries from the schedule
+   (a deterministic per-seed shuffle, ~5% novel payloads the store has
+   never seen), each answering ``plan(req).schedule()`` and recording
+   its own latency.  Hit rate and store recompiles come from
+   ``schedule_cache_info()``; tail latency from the per-query samples.
+
+A fifth measurement races :func:`repro.api.plan_batch` against the
+equivalent ``plan()`` loop from a cold selector (reset before each side)
+— the batched front-end must win on wall while returning identical
+plans.
+
+Cells land on the benchmark trajectory (``BENCH_schedules.json``) in two
+tables so the CI gate can hold them to different slack:
+
+* ``SVC`` — deterministic service-quality numbers: ``miss_rate_pct``,
+  ``store_recompiles``, ``batch_vs_loop_pct`` (batch wall as % of loop
+  wall; < 100 means the batch won).
+* ``SVC-WALL`` — wall-clock observations (``cold_wall_ms``,
+  ``warm_wall_ms``, ``warm_p50_us``, ``warm_p99_us``): machine-speed
+  dependent, gated only against catastrophic blowups.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.load [--threads 8] [--queries 1000]
+        [--smoke] [--store DIR] [--report load_report.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.schedule_ir import (
+    schedule_cache_clear,
+    schedule_cache_info,
+    schedule_cache_reset,
+)
+from repro.core.selector import selector_cache_reset
+from repro.obs import metrics as obs_metrics
+from repro.store import ArtifactStore
+
+__all__ = ["run_load", "distinct_requests", "main"]
+
+#: serve-phase per-query latency buckets (seconds): 1us .. 1s geometric.
+_LAT_EDGES = (1e-6, 3e-6, 1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 1e-2, 1e-1, 1.0)
+
+#: collective meshes the load mixes over: (num_nodes, procs_per_node, k_lanes)
+_MESHES = ((2, 8, 2), (3, 4, 2), (2, 16, 4))
+
+#: payload ladder per op (selector conventions: total / per-proc / per-pair)
+_PAYLOADS = {
+    "broadcast": (64, 4096, 1 << 18),
+    "scatter": (16, 512, 1 << 14),
+    "alltoall": (1, 87, 869, 10000, 1 << 20),
+}
+
+
+def distinct_requests(*, smoke: bool = False) -> list[api.PlanRequest]:
+    """The distinct query population: every (op, payload, mesh) combo."""
+    meshes = _MESHES[:2] if smoke else _MESHES
+    reqs = []
+    for nn, ppn, kl in meshes:
+        for op, payloads in _PAYLOADS.items():
+            ps = payloads[:2] if smoke else payloads
+            for c in ps:
+                reqs.append(api.PlanRequest(
+                    op, c, num_nodes=nn, procs_per_node=ppn, k_lanes=kl))
+    return reqs
+
+
+def _novel_requests(rng: random.Random, n: int) -> list[api.PlanRequest]:
+    """Payloads the cold phase (and therefore the store) never saw — the
+    serve phase's honest cache misses."""
+    out = []
+    for _ in range(n):
+        nn, ppn, kl = _MESHES[rng.randrange(len(_MESHES))]
+        op = rng.choice(("broadcast", "scatter", "alltoall"))
+        c = rng.randrange(3, 1 << 16) * 7 + 3  # off the distinct ladder
+        out.append(api.PlanRequest(op, c, num_nodes=nn, procs_per_node=ppn,
+                                   k_lanes=kl))
+    return out
+
+
+def _answer(req: api.PlanRequest):
+    return api.plan(req).schedule()
+
+
+def run_load(
+    *,
+    threads: int = 8,
+    total: int = 1000,
+    smoke: bool = False,
+    store_root: str | None = None,
+    seed: int = 0,
+) -> tuple[list[dict], dict]:
+    """Run all phases; returns ``(cells, report)``.  ``store_root=None``
+    uses a throwaway temp directory (hermetic); passing a directory keeps
+    the artifacts for inspection."""
+    rng = random.Random(seed)
+    tmp_root = None
+    if store_root is None:
+        tmp_root = tempfile.mkdtemp(prefix="repro_load_store_")
+        store_root = tmp_root
+    try:
+        return _run_load(threads, total, smoke, store_root, rng)
+    finally:
+        if tmp_root is not None:
+            shutil.rmtree(tmp_root, ignore_errors=True)
+
+
+def _run_load(threads, total, smoke, store_root, rng):
+    distinct = distinct_requests(smoke=smoke)
+    store = ArtifactStore(store_root)
+    store.clear()
+
+    # -- phase 1: cold ----------------------------------------------------
+    schedule_cache_clear()
+    selector_cache_reset()
+    t0 = time.perf_counter()
+    for req in distinct:
+        _answer(req)
+    cold_wall_s = time.perf_counter() - t0
+
+    # -- phase 2: persist + simulated restart -----------------------------
+    persisted = store.persist_cache()
+    schedule_cache_clear()
+    selector_cache_reset()
+
+    # -- phase 3: warm start ----------------------------------------------
+    t0 = time.perf_counter()
+    warm_report = store.warm_start()
+    warm_start_s = time.perf_counter() - t0
+    schedule_cache_reset()
+
+    # -- phase 4: concurrent serve ----------------------------------------
+    # ~2% novel queries; each costs several cache misses (the selector
+    # races candidate compiles on the proxy machine before the winner
+    # compiles on the real one), so the realized miss rate is ~4x this.
+    novel_n = max(1, total // 50)
+    schedule = list(distinct) * (max(0, total - novel_n) // len(distinct) + 1)
+    schedule = schedule[: total - novel_n] + _novel_requests(rng, novel_n)
+    rng.shuffle(schedule)
+    shards = [schedule[i::threads] for i in range(threads)]
+    lat_hist = obs_metrics.histogram("load.query_latency_s", edges=_LAT_EDGES)
+    lats: list[list[float]] = [[] for _ in range(threads)]
+    errors: list[BaseException] = []
+
+    def worker(tid: int) -> None:
+        my = lats[tid]
+        try:
+            for req in shards[tid]:
+                q0 = time.perf_counter()
+                _answer(req)
+                dq = time.perf_counter() - q0
+                my.append(dq)
+                lat_hist.observe(dq)
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errors.append(e)
+
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    warm_wall_s = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    info = schedule_cache_info()
+    lookups = info["hits"] + info["misses"]
+    miss_rate_pct = 100.0 * info["misses"] / lookups if lookups else 0.0
+    all_lats = np.asarray(sorted(x for l in lats for x in l))
+    p50_us = float(np.percentile(all_lats, 50)) * 1e6 if all_lats.size else 0.0
+    p99_us = float(np.percentile(all_lats, 99)) * 1e6 if all_lats.size else 0.0
+
+    # -- phase 5: batch vs loop -------------------------------------------
+    batch_reqs = [r for r in distinct if r.op == "alltoall"]
+    selector_cache_reset()
+    t0 = time.perf_counter()
+    loop_plans = [api.plan(r) for r in batch_reqs]
+    loop_s = time.perf_counter() - t0
+    selector_cache_reset()
+    t0 = time.perf_counter()
+    batch_plans = api.plan_batch(batch_reqs)
+    batch_s = time.perf_counter() - t0
+    assert batch_plans == loop_plans, "plan_batch diverged from plan loop"
+    batch_vs_loop_pct = 100.0 * batch_s / loop_s if loop_s else 0.0
+
+    report = {
+        "smoke": smoke,
+        "threads": threads,
+        "total_queries": total,
+        "distinct_queries": len(distinct),
+        "novel_queries": novel_n,
+        "cold_wall_s": cold_wall_s,
+        "persisted": persisted,
+        "warm_start": warm_report,
+        "warm_start_s": warm_start_s,
+        "warm_wall_s": warm_wall_s,
+        "hit_rate_pct": 100.0 - miss_rate_pct,
+        "miss_rate_pct": miss_rate_pct,
+        "store_recompiles": info["store_recompiles"],
+        "cache_info": info,
+        "p50_us": p50_us,
+        "p99_us": p99_us,
+        "batch_queries": len(batch_reqs),
+        "loop_wall_s": loop_s,
+        "batch_wall_s": batch_s,
+        "batch_vs_loop_pct": batch_vs_loop_pct,
+    }
+
+    def cell(table, impl, value, wall_s):
+        return {"table": table, "impl": impl, "k": 0, "c": 0,
+                "sim_us": value, "paper_us": "", "wall_s": wall_s}
+
+    cells = [
+        cell("SVC", "miss_rate_pct", miss_rate_pct, warm_wall_s),
+        cell("SVC", "store_recompiles", float(info["store_recompiles"]),
+             warm_wall_s),
+        cell("SVC", "batch_vs_loop_pct", batch_vs_loop_pct,
+             loop_s + batch_s),
+        cell("SVC-WALL", "cold_wall_ms", cold_wall_s * 1e3, cold_wall_s),
+        cell("SVC-WALL", "warm_wall_ms", warm_wall_s * 1e3, warm_wall_s),
+        cell("SVC-WALL", "warm_p50_us", p50_us, warm_wall_s),
+        cell("SVC-WALL", "warm_p99_us", p99_us, warm_wall_s),
+    ]
+    return cells, report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=1000,
+                    help="total serve-phase queries across all threads")
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded mode for CI: fewer meshes/payloads, "
+                    "4 threads x 200 queries unless overridden")
+    ap.add_argument("--store", metavar="DIR", default=None,
+                    help="persistent store root (default: throwaway tmpdir)")
+    ap.add_argument("--report", metavar="FILE", default=None,
+                    help="write the full phase report as JSON")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--min-hit-rate", type=float, default=90.0,
+                    dest="min_hit_rate",
+                    help="fail (exit 1) below this warm-phase schedule-"
+                    "cache hit rate %% (default: %(default)s)")
+    args = ap.parse_args()
+    threads = args.threads
+    total = args.queries
+    if args.smoke:
+        threads = min(threads, 4)
+        total = min(total, 200)
+    cells, report = run_load(threads=threads, total=total, smoke=args.smoke,
+                             store_root=args.store, seed=args.seed)
+    print("table,impl,k,c,sim_us,paper_us")
+    for c in cells:
+        print(f"{c['table']},{c['impl']},{c['k']},{c['c']},"
+              f"{c['sim_us']:.4f},{c['paper_us']}")
+    print(f"# hit_rate={report['hit_rate_pct']:.2f}% "
+          f"store_recompiles={report['store_recompiles']} "
+          f"batch_vs_loop={report['batch_vs_loop_pct']:.1f}% "
+          f"p50={report['p50_us']:.1f}us p99={report['p99_us']:.1f}us")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote load report to {args.report}")
+    # service contract (ISSUE 8 acceptance): a warm-started process must
+    # answer the load at >= min hit rate with zero recompiles of
+    # store-resident artifacts, and the batch front-end must beat the loop
+    ok = (report["hit_rate_pct"] >= args.min_hit_rate
+          and report["store_recompiles"] == 0
+          and report["batch_vs_loop_pct"] < 100.0)
+    if not ok:
+        print(f"# load: FAIL — contract breach (hit_rate "
+              f"{report['hit_rate_pct']:.2f}% < {args.min_hit_rate}%, or "
+              f"store_recompiles {report['store_recompiles']} != 0, or "
+              f"batch_vs_loop {report['batch_vs_loop_pct']:.1f}% >= 100%)")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

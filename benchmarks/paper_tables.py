@@ -544,6 +544,22 @@ def render_optimizer_deltas(rows) -> list[str]:
     return out
 
 
+def table_svc():
+    """Schedule-as-a-service cells (ISSUE 8): the cold→persist→restart→
+    warm-serve load test from :mod:`benchmarks.load`, emitting the SVC
+    (deterministic service quality) and SVC-WALL (wall-clock) cells.
+    Runs LAST: it clears the process-wide caches, which would otherwise
+    cold-start the tables above mid-sweep."""
+    from benchmarks.load import run_load
+
+    cells, report = run_load()
+    if TRACER:
+        TRACER.event("bench.svc", hit_rate_pct=report["hit_rate_pct"],
+                     store_recompiles=report["store_recompiles"],
+                     batch_vs_loop_pct=report["batch_vs_loop_pct"])
+    return cells
+
+
 ALL_TABLES = [
     table_alltoall_node_vs_network,
     table_broadcast,
@@ -553,4 +569,6 @@ ALL_TABLES = [
     table_optimizer_deltas2,
     table_optimizer_deltas3,
     table_degraded,
+    # LAST: clears the process caches (see docstring)
+    table_svc,
 ]

@@ -15,9 +15,10 @@ import numpy as np
 # ---------------------------------------------------------------------------
 # 1. The paper's contribution: k-ported vs k-lane vs full-lane collectives.
 # ---------------------------------------------------------------------------
+from repro.api import PlanRequest, plan
 from repro.core import (
     Topology, fulllane_broadcast, kported_broadcast, klane_broadcast,
-    simulate, select,
+    simulate,
 )
 from repro.core.topology import hydra_machine
 
@@ -33,7 +34,8 @@ for name, sched in [
     r = simulate(sched, machine)
     print(f"  {name:22s} rounds={r.rounds:4d}  sim={r.time_us:10.1f} us")
 
-choice = select("broadcast", 1 << 22, num_nodes=2, procs_per_node=256, k_lanes=8)
+choice = plan(PlanRequest("broadcast", 1 << 22,
+                          num_nodes=2, procs_per_node=256, k_lanes=8))
 print(f"\n== selector on a 2-pod TPU: broadcast 4M elems -> {choice.algorithm} "
       f"(candidates: {choice.candidates})\n")
 

@@ -102,10 +102,11 @@ def selector_choices(cost, elem_bytes=2, num_nodes=2, procs_per_node=256,
     the 'tuned collectives' view of the same cell the roofline terms
     describe.
     """
-    from repro.core.selector import select
+    from repro.api import PlanRequest, plan_batch
 
     p = num_nodes * procs_per_node
     rows = []
+    kinds = []
     for kind, nbytes in sorted(cost.collective_bytes.items(), key=lambda kv: -kv[1]):
         op = _KIND_TO_OP.get(kind)
         if op is None or not nbytes:
@@ -118,9 +119,11 @@ def selector_choices(cost, elem_bytes=2, num_nodes=2, procs_per_node=256,
         else:
             payload = elems
         payload = max(1, payload)
-        ch = select(op, payload, num_nodes=num_nodes,
-                    procs_per_node=procs_per_node, k_lanes=k_lanes)
-        rows.append((kind, op, payload, ch.algorithm, ch.est_us))
+        kinds.append((kind, PlanRequest(
+            op, payload, num_nodes=num_nodes,
+            procs_per_node=procs_per_node, k_lanes=k_lanes)))
+    for (kind, req), pl in zip(kinds, plan_batch([r for _, r in kinds])):
+        rows.append((kind, req.op, req.payload_elems, pl.algorithm, pl.est_us))
     return rows
 
 

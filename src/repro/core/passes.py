@@ -202,6 +202,7 @@ __all__ = [
     "OPT_MODES",
     "choose_color_budget",
     "pipeline_fingerprint",
+    "mode_fingerprint",
     "PASS_PIPELINE_VERSION",
 ]
 
@@ -220,6 +221,23 @@ def pipeline_fingerprint(passes: Sequence) -> str:
     names = ",".join(getattr(ps, "name", type(ps).__name__) for ps in passes)
     raw = f"{PASS_PIPELINE_VERSION}|{names}"
     return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+def mode_fingerprint(mode: str, topo: "Topology | None" = None) -> str:
+    """The current fingerprint of one :data:`OPT_MODES` pipeline as it
+    would be instantiated for ``topo`` — the validity check the on-disk
+    artifact store (:mod:`repro.store`) runs at warm-start: a persisted
+    optimized entry whose recorded fingerprint no longer equals
+    ``mode_fingerprint(entry.optimize, entry.topo)`` was produced by a
+    pipeline that has since changed (version salt bump or pass/parameter
+    change) and must be evicted, not served."""
+    try:
+        factory = OPT_MODES[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown optimize mode {mode!r}; expected one of {sorted(OPT_MODES)}"
+        ) from None
+    return pipeline_fingerprint(factory(topo))
 
 
 # ---------------------------------------------------------------------------

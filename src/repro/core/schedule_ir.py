@@ -96,6 +96,8 @@ __all__ = [
     "schedule_cache_info",
     "schedule_cache_clear",
     "schedule_cache_reset",
+    "cache_export",
+    "cache_seed",
 ]
 
 
@@ -799,6 +801,14 @@ _CACHE_HITS = 0
 _CACHE_MISSES = 0
 _RECIPE_HITS = 0
 _RECIPE_MISSES = 0
+# Keys seeded from the on-disk artifact store (repro.store warm-start).
+# Membership survives FIFO eviction on purpose: a rebuild of *any* key the
+# store had already materialized is a recompile the serving layer promised
+# not to pay — counted in _STORE_RECOMPILES and the
+# ``schedule_cache.store_recompiles`` metric (the load benchmark's
+# "zero recompiles of store-resident artifacts" acceptance gate).
+_STORE_RESIDENT: set[tuple] = set()
+_STORE_RECOMPILES = 0
 _CACHE_MAX = 512
 # Paper-scale alltoall entries cost tens of MB each (message arrays plus the
 # lazily-built [R, p] stats grids), so bound resident bytes as well as count;
@@ -822,17 +832,33 @@ def _entry_bytes(cs: CompiledSchedule) -> int:
 
 
 def compiled_schedule(
-    op: str,
-    algorithm: str,
-    topo: Topology,
-    k: int,
-    c: int,
+    op,
+    algorithm: str | None = None,
+    topo: Topology | None = None,
+    k: int | None = None,
+    c: int | None = None,
     root: int = 0,
     *,
     optimize: str | None = None,
     faults=None,
 ) -> CompiledSchedule:
     """Cached compiled schedule for an ``ALGORITHMS`` family.
+
+    **PlanRequest overload** (ISSUE 8 API redesign): the first argument may
+    be a :class:`repro.api.PlanRequest` instead of the op string, in which
+    case only ``algorithm`` is required — the topology, generation ``k``
+    and payload ``c`` are derived from the request exactly the way the
+    selector's fallback rung derives them (``k = min(k_lanes,
+    procs_per_node)``; ``c`` is the total payload for broadcast, the
+    per-proc/per-pair block otherwise), an ``"opt:"``-prefixed algorithm
+    selects the ``"color"`` pipeline, and the request's faults ride along::
+
+        compiled_schedule(PlanRequest("alltoall", 869, num_nodes=3,
+                                      procs_per_node=4, k_lanes=2),
+                          plan.algorithm)
+
+    The positional 9-argument form below stays the compiler-internal
+    entry point.
 
     Alltoall families come from the array-native generators; the tree
     families (O(p log p) messages) generate the legacy schedule and compile
@@ -867,6 +893,31 @@ def compiled_schedule(
     regime flip the rewrites cause.
     """
     global _CACHE_HITS, _CACHE_MISSES, _RECIPE_HITS, _RECIPE_MISSES
+    global _STORE_RECOMPILES
+    if not isinstance(op, str):
+        req = op  # duck-typed PlanRequest (api imports this module, not v.v.)
+        if algorithm is None:
+            raise TypeError(
+                "compiled_schedule(PlanRequest, ...) requires an algorithm "
+                "(e.g. plan(request).algorithm)"
+            )
+        alg, opt_mode = algorithm, optimize
+        if alg.startswith("opt:"):
+            alg, opt_mode = alg[4:], "color"
+        req_faults = req.faults
+        if req_faults is not None and req_faults.is_healthy:
+            req_faults = None
+        return compiled_schedule(
+            req.op,
+            alg,
+            Topology(req.num_nodes, req.procs_per_node, req.k_lanes),
+            min(req.k_lanes, req.procs_per_node),
+            req.payload_elems if req.op == "broadcast"
+            else max(1, req.payload_elems),
+            root,
+            optimize=opt_mode,
+            faults=req_faults,
+        )
     fingerprint = None
     passes = None
     if optimize is not None:
@@ -903,6 +954,9 @@ def compiled_schedule(
             _CACHE_HITS += 1
         else:
             _CACHE_MISSES += 1
+            if key in _STORE_RESIDENT:
+                _STORE_RECOMPILES += 1
+                obs_metrics.counter("schedule_cache.store_recompiles").inc()
     if hit is not None:
         obs_metrics.counter("schedule_cache.hits").inc()
         if TRACER:
@@ -1047,6 +1101,52 @@ def _cache_bytes() -> int:
     return sum(_entry_bytes(cs) for cs in _CACHE.values())
 
 
+def cache_export() -> tuple[dict[tuple, CompiledSchedule], dict[tuple, dict]]:
+    """One coherent snapshot of the process cache: ``(entries, recipes)``
+    as plain dicts keyed by the full cache/recipe key tuples.  This is the
+    persistence boundary for :class:`repro.store.ArtifactStore` — the
+    values are the cached frozen ``CompiledSchedule`` objects themselves
+    (safe to share: entries are never mutated after insertion) and
+    shallow copies of the recipe dicts."""
+    with _LOCK:
+        return dict(_CACHE), {rk: dict(rec) for rk, rec in _RECIPES.items()}
+
+
+def cache_seed(
+    entries: dict[tuple, CompiledSchedule],
+    recipes: dict[tuple, dict] | None = None,
+    *,
+    resident: bool = True,
+) -> int:
+    """Warm-start the process cache with prebuilt entries (the
+    :class:`repro.store.ArtifactStore` load path).  Existing keys are kept
+    (a live entry is never clobbered by a disk copy), insertion respects
+    the count/byte bounds with the same FIFO eviction as a compile miss,
+    and seeding moves no hit/miss counters — a warm start is neither.
+    With ``resident=True`` the seeded keys are tracked so any later
+    rebuild of one of them counts as a store recompile
+    (``schedule_cache_info()["store_recompiles"]``).  Returns the number
+    of schedule entries actually inserted."""
+    inserted = 0
+    with _LOCK:
+        for key, cs in entries.items():
+            if resident:
+                _STORE_RESIDENT.add(key)
+            if key in _CACHE:
+                continue
+            new_bytes = _entry_bytes(cs)
+            while _CACHE and (
+                len(_CACHE) >= _CACHE_MAX
+                or _cache_bytes() + new_bytes > _CACHE_MAX_BYTES
+            ):
+                _CACHE.pop(next(iter(_CACHE)))
+            _CACHE[key] = cs
+            inserted += 1
+        for rk, rec in (recipes or {}).items():
+            _RECIPES.setdefault(rk, rec)
+    return inserted
+
+
 def schedule_cache_info() -> dict:
     with _LOCK:
         return {
@@ -1057,29 +1157,37 @@ def schedule_cache_info() -> dict:
             "size": len(_CACHE),
             "recipes": len(_RECIPES),
             "bytes": _cache_bytes(),
+            "store_resident": len(_STORE_RESIDENT),
+            "store_recompiles": _STORE_RECOMPILES,
         }
 
 
 def schedule_cache_clear() -> None:
     """Drop every cached entry and recipe, and zero the counters."""
     global _CACHE_HITS, _CACHE_MISSES, _RECIPE_HITS, _RECIPE_MISSES
+    global _STORE_RECOMPILES
     with _LOCK:
         _CACHE.clear()
         _RECIPES.clear()
+        _STORE_RESIDENT.clear()
         _CACHE_HITS = 0
         _CACHE_MISSES = 0
         _RECIPE_HITS = 0
         _RECIPE_MISSES = 0
+        _STORE_RECOMPILES = 0
 
 
 def schedule_cache_reset() -> None:
     """Zero the hit/miss counters while *keeping* cached entries and
     recipes — the ``schedule_cache_info`` counterpart for measuring the
     hit rate of one workload window without cold-starting the cache
-    (``schedule_cache_clear`` drops the entries too)."""
+    (``schedule_cache_clear`` drops the entries too).  Store-resident
+    key tracking survives; only the recompile counter rewinds."""
     global _CACHE_HITS, _CACHE_MISSES, _RECIPE_HITS, _RECIPE_MISSES
+    global _STORE_RECOMPILES
     with _LOCK:
         _CACHE_HITS = 0
         _CACHE_MISSES = 0
         _RECIPE_HITS = 0
         _RECIPE_MISSES = 0
+        _STORE_RECOMPILES = 0

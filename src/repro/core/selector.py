@@ -50,19 +50,24 @@ import time
 
 import threading
 
+import warnings
+
 from repro.core.faults import FaultSpec, apply_faults
 from repro.core.schedule_ir import compiled_schedule
-from repro.core.simulate import simulate
+from repro.core.simulate import simulate, simulate_payload_scaled
 from repro.core.topology import Machine, Topology, tpu_v5e_machine
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import TRACER
 
 __all__ = [
     "select",
+    "select_batch",
     "Choice",
     "CandidateRecord",
     "Decision",
     "last_decision",
+    "selector_cache_reset",
+    "selector_cache_info",
     "crossover_table",
     "affine_cost",
     "piecewise_cost",
@@ -288,8 +293,21 @@ def select(
     a repeat explain is cheap); plain calls are cached per argument tuple
     as before.  :func:`last_decision` returns the record of the most
     recent uncached race either way.
+
+    .. deprecated:: ISSUE 8
+        ``explain=True`` (the ``Choice | Decision`` union return) is a
+        thin shim over :func:`repro.api.explain`; new code should call
+        ``explain(PlanRequest(...))`` and keep ``select`` returning only
+        :class:`Choice`.
     """
     if explain:
+        warnings.warn(
+            "select(..., explain=True) is deprecated; use "
+            "repro.api.explain(PlanRequest(...)) which always returns the "
+            "Decision record",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return _select_impl(op, payload_elems, num_nodes, procs_per_node,
                             k_lanes, faults, deadline_s)
     return _select_cached(op, payload_elems, num_nodes, procs_per_node,
@@ -305,9 +323,10 @@ def _select_cached(
     k_lanes: int,
     faults: FaultSpec | None,
     deadline_s: float | None,
+    include_opt: bool = True,
 ) -> Choice:
     return _select_impl(op, payload_elems, num_nodes, procs_per_node,
-                        k_lanes, faults, deadline_s).choice
+                        k_lanes, faults, deadline_s, include_opt).choice
 
 
 def _select_impl(
@@ -318,6 +337,7 @@ def _select_impl(
     k_lanes: int,
     faults: FaultSpec | None,
     deadline_s: float | None,
+    include_opt: bool = True,
 ) -> Decision:
     global _LAST_DECISION
     if faults is not None and faults.is_healthy:
@@ -339,7 +359,10 @@ def _select_impl(
 
     algs = _candidate_algs(op, race_topo)
     base_algs = [a for a in algs if not a.startswith("opt:")]
-    opt_algs = [a for a in algs if a.startswith("opt:")]
+    # include_opt=False (PlanRequest(optimize=False)) races base families
+    # only — distinct from deadline_s=0, which *records* the opt: rung as
+    # deadline-skipped; an un-requested rung leaves no record at all.
+    opt_algs = [a for a in algs if a.startswith("opt:")] if include_opt else []
 
     recs: list[CandidateRecord] = []
     probes = 0
@@ -426,6 +449,106 @@ def _select_impl(
     with _LAST_LOCK:
         _LAST_DECISION = decision
     return decision
+
+
+def select_batch(queries) -> list[Choice]:
+    """Answer many healthy selector queries in one call (ISSUE 8).
+
+    ``queries`` is a sequence of ``(op, payload_elems, num_nodes,
+    procs_per_node, k_lanes)`` tuples; the result list is aligned with it
+    and each entry equals — bit for bit — what ``select()`` returns for
+    the same arguments.  Faulted or deadline-bounded queries do not
+    belong here; :func:`repro.api.plan_batch` routes those through the
+    per-query ladder.
+
+    Instead of looping ``select()`` (one compile + one simulation per
+    (candidate, payload)), queries are grouped by ``(op, mesh)`` and each
+    candidate algorithm is compiled **once at unit payload**; all the
+    group's payloads are then priced through one stacked pass of the
+    array-native simulator (``simulate_payload_scaled``, exact because
+    alltoall message sizes are linear in ``c``).  Tree ops (broadcast /
+    scatter) chunk payloads with remainders — not linear in ``c`` — so
+    they fall back to the cached per-query race, which amortizes across
+    the batch anyway.
+    """
+    queries = list(queries)
+    results: list[Choice | None] = [None] * len(queries)
+    groups: dict[tuple, list[tuple[int, int]]] = {}
+    for i, q in enumerate(queries):
+        op, payload, nn, ppn, kl = q
+        if op == "alltoall":
+            groups.setdefault((op, nn, ppn, kl), []).append((i, int(payload)))
+        else:
+            results[i] = _select_cached(op, payload, nn, ppn, kl, None, None)
+    for (op, nn, ppn, kl), items in groups.items():
+        machine = _machine_for(nn, ppn, kl)
+        proxy, scale = _proxy_machine(machine)
+        topo = proxy.topo
+        k = min(topo.k_lanes, topo.procs_per_node)
+        payloads = sorted({p for _, p in items})
+        index = {p: j for j, p in enumerate(payloads)}
+        # the same proxy payload scaling _sim_payload applies per query
+        cvals = [max(1, int(p / scale)) for p in payloads]
+        algs = _candidate_algs(op, topo)
+        # price base families before opt: rewrites so candidate insertion
+        # order — the tie-break sorted() preserves — matches select()
+        ordered = ([a for a in algs if not a.startswith("opt:")]
+                   + [a for a in algs if a.startswith("opt:")])
+        prices = {}  # alg -> float64 [len(payloads)] stacked prices
+        for alg in ordered:
+            base_alg, optimize = _parse_alg(alg)
+            try:
+                cs_unit = compiled_schedule(op, base_alg, topo, k, 1,
+                                            optimize=optimize)
+            except AssertionError:
+                raise  # healthy opt: oracle failure is a bug, not a mode
+            except Exception:
+                continue  # family not generatable at this topology
+            prices[alg] = simulate_payload_scaled(cs_unit, proxy, cvals)
+        obs_metrics.counter("selector.batch.groups").inc()
+        obs_metrics.counter("selector.batch.queries").inc(len(items))
+        for i, payload in items:
+            j = index[payload]
+            candidates = {alg: float(ts[j]) for alg, ts in prices.items()}
+            if not candidates:
+                # every family failed to price: per-query final fallback
+                results[i] = _select_cached(op, payload, nn, ppn, kl,
+                                            None, None)
+                continue
+            ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
+            best, est = ranked[0]
+            results[i] = Choice(op=op, algorithm=best, est_us=est,
+                                candidates=ranked)
+    return results
+
+
+def selector_cache_reset() -> None:
+    """Drop every selector-level memo — the cached Choices, the payload
+    probes, and the affine/piecewise fits — plus the last-decision record
+    (``schedule_cache_reset``'s counterpart one layer up).  The artifact
+    store calls this at warm-start: a ``Choice`` cached before the store
+    swapped the process cache underneath it may name a price the bumped
+    pipeline no longer produces, and an lru entry is unkeyed by pipeline
+    fingerprint, so invalidation has to be wholesale."""
+    global _LAST_DECISION
+    _select_cached.cache_clear()
+    _sim_payload.cache_clear()
+    affine_cost.cache_clear()
+    piecewise_cost.cache_clear()
+    with _LAST_LOCK:
+        _LAST_DECISION = None
+    obs_metrics.counter("selector.cache_resets").inc()
+
+
+def selector_cache_info() -> dict:
+    """Hit/miss/size counters for every selector-level lru cache."""
+    out = {}
+    for name, fn in (("select", _select_cached), ("sim_payload", _sim_payload),
+                     ("affine", affine_cost), ("piecewise", piecewise_cost)):
+        ci = fn.cache_info()
+        out[name] = {"hits": ci.hits, "misses": ci.misses,
+                     "size": ci.currsize, "max": ci.maxsize}
+    return out
 
 
 @functools.lru_cache(maxsize=4096)

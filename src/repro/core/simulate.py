@@ -53,7 +53,14 @@ import numpy as np
 from repro.core.schedule import Schedule
 from repro.core.topology import Machine
 
-__all__ = ["simulate", "simulate_msgs", "SimResult", "port_time", "lane_time"]
+__all__ = [
+    "simulate",
+    "simulate_payload_scaled",
+    "simulate_msgs",
+    "SimResult",
+    "port_time",
+    "lane_time",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +254,85 @@ def _simulate_ir(cs, machine: Machine, *, ported: bool) -> SimResult:
         intra_elems=st.intra_elems,
         max_node_inflight=max_inflight,
     )
+
+
+def simulate_payload_scaled(
+    cs, machine: Machine, payloads, *, ported: bool = False
+) -> np.ndarray:
+    """Price one schedule *structure* at many payload sizes in one stacked
+    pass — the batched-selector fast path (ISSUE 8).
+
+    ``cs`` must be compiled at **unit payload** (``c=1``) for a family
+    whose message sizes scale linearly with ``c`` (every alltoall
+    generator, and their ``recipe_safe`` ``opt:`` permutations: ``elems``
+    is a per-message block count times ``c``).  The per-round cost grids
+    are then exactly the unit grids scaled by ``c`` — integer-valued
+    float64 products well under 2**53, so each scaled term is the *same
+    float* ``_simulate_ir`` computes from a schedule compiled at that
+    payload — and all Q payloads evaluate through one ``[Q, R, p]``
+    broadcasted pass instead of Q schedule compilations + simulations.
+
+    Bit-exactness is load-bearing: ``plan_batch()`` must equal N separate
+    ``plan()`` calls (tests pin this), so every expression below mirrors
+    ``_simulate_ir`` operation for operation, including the sequential
+    per-round accumulation.  Degraded machines take the per-query path
+    (`simulate`); batching is a healthy-traffic optimization.
+
+    Returns ``float64 [Q]`` times in microseconds, aligned with
+    ``payloads``.
+    """
+    from repro.core.schedule_ir import CompiledSchedule
+
+    if not isinstance(cs, CompiledSchedule):
+        raise TypeError(f"cannot simulate {type(cs).__name__}")
+    if machine.degradation() is not None:
+        raise NotImplementedError(
+            "simulate_payload_scaled prices healthy machines; degraded "
+            "queries go through simulate() per payload"
+        )
+    topo, cost = machine.topo, machine.cost
+    k = topo.k_lanes
+    C = np.asarray(payloads, dtype=np.float64).reshape(-1, 1, 1)  # [Q,1,1]
+    Q = C.shape[0]
+    if cs.num_msgs == 0 or Q == 0:
+        return np.zeros(Q, dtype=np.float64)
+    st = cs.stats(topo.procs_per_node)
+    R = cs.num_rounds
+
+    s_mask = st.send_cnt > 0
+    t_send = port_time(
+        cost, st.send_elems * C, st.send_cnt, st.send_inter, k, ported=ported
+    )
+    t_send = np.where(s_mask, t_send, 0.0)
+
+    r_mask = st.recv_cnt > 0
+    t_recv = port_time(
+        cost, st.recv_elems * C, st.recv_cnt, st.recv_inter, k,
+        ported=ported, alpha_batches=False,
+    )
+    t_recv = np.where(r_mask, t_recv, 0.0)
+
+    streams = np.maximum(st.node_out_msgs, st.node_in_msgs)
+    n_mask = streams > 0
+    t_node = lane_time(
+        cost, np.maximum(st.node_out, st.node_in) * C, streams, k
+    )
+    t_node = np.where(n_mask, t_node, 0.0)
+
+    i_mask = st.node_intra_cnt > 0
+    t_intra = cost.alpha_intra + (st.node_intra * C) / cost.node_bw_elems
+    t_intra = np.where(i_mask, t_intra, 0.0)
+
+    round_times = np.maximum(
+        np.maximum(t_send.max(axis=2), t_recv.max(axis=2)),
+        np.maximum(t_node.max(axis=2), t_intra.max(axis=2)),
+    )  # [Q, R]
+    # Sequential accumulation in round order, vectorized over queries —
+    # identical float association to _simulate_ir's scalar loop.
+    total = np.zeros(Q, dtype=np.float64)
+    for r in range(R):
+        total = total + round_times[:, r]
+    return total
 
 
 def simulate_msgs(

@@ -22,7 +22,10 @@ Artifact shape::
 
 File name: ``<reason>.forensics.json`` in the armed directory (or the
 ``dir``/``path`` arguments); repeated dumps for the same reason get a
-``-2``, ``-3``, ... suffix so a chaos sweep keeps every incident.
+``-2``, ``-3``, ... suffix so a chaos sweep keeps every incident.  When
+nothing is armed, unconditional dumps land in the git-ignored
+``artifacts/`` directory rather than littering the repo root;
+``REPRO_FORENSICS=1`` keeps the legacy current-directory behavior.
 """
 
 from __future__ import annotations
@@ -39,6 +42,9 @@ __all__ = ["enable", "disable", "enabled_dir", "dump", "auto_dump"]
 
 _LOCK = threading.Lock()
 _DIR: str | None = None
+
+#: Where unconditional dumps go when no directory is armed or passed.
+DEFAULT_DIR = "artifacts"
 
 
 def enable(directory: str = ".") -> None:
@@ -81,7 +87,7 @@ def dump(reason: str, extra: dict[str, Any] | None = None, *,
          dir: str | None = None, path: str | None = None) -> str:
     """Write a forensics artifact unconditionally; returns its path."""
     if path is None:
-        directory = dir if dir is not None else (enabled_dir() or ".")
+        directory = dir if dir is not None else (enabled_dir() or DEFAULT_DIR)
         os.makedirs(directory, exist_ok=True)
         path = _unique_path(directory, reason)
     doc = {

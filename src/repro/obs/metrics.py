@@ -168,6 +168,26 @@ class Histogram:
     def mean(self) -> float:
         return self._sum / self._n if self._n else 0.0
 
+    def percentile(self, q: float) -> float:
+        """Bucket-resolution percentile estimate: the smallest upper edge
+        whose cumulative count covers fraction ``q`` of observations
+        (``q`` in [0, 1]).  Values in the overflow bucket report the last
+        edge — a histogram cannot see past it.  Returns 0.0 when empty."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError("q must be in [0, 1]")
+        with _LOCK:
+            n = self._n
+            counts = [int(c) for c in self._counts]
+        if n == 0:
+            return 0.0
+        target = q * n
+        cum = 0
+        for i, c in enumerate(counts):
+            cum += c
+            if cum >= target:
+                return self.edges[min(i, len(self.edges) - 1)]
+        return self.edges[-1]
+
     def _reset(self) -> None:
         nb = len(self.edges) + 1
         if _np is not None:

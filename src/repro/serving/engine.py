@@ -144,6 +144,53 @@ class ServeEngine:
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
 
+    def plan_decode_collectives(
+        self,
+        *,
+        num_nodes: int = 2,
+        procs_per_node: int = 8,
+        k_lanes: int = 2,
+        faults=None,
+    ):
+        """Plan the per-decode-step collectives for this engine's shapes on
+        the given collective mesh, in one :func:`repro.api.plan_batch` call:
+
+        * ``broadcast`` of the pending sampled-token batch (one int32 per
+          slot per codebook) from the sampling host to every proc;
+        * ``scatter`` of the activation block (``num_slots * d_model``
+          split over procs) for tensor-parallel resharding;
+        * ``alltoall`` with the per-pair block of that same activation
+          resharding (the transpose the paper's Section 5 lowers).
+
+        Returns ``{op: Plan}``.  Deliberately jax-free — the planning layer
+        prices schedules, it does not run them — so a monitor process can
+        call this off the hot path.  Faulted meshes flow through the
+        ISSUE 6 degradation ladder via ``faults``."""
+        from repro import api
+
+        p = num_nodes * procs_per_node
+        bcast_elems = self.num_slots * max(1, self.cfg.num_codebooks)
+        act = self.num_slots * self.cfg.d_model
+        reqs = [
+            api.PlanRequest("broadcast", bcast_elems, num_nodes=num_nodes,
+                            procs_per_node=procs_per_node, k_lanes=k_lanes,
+                            faults=faults),
+            api.PlanRequest("scatter", max(1, act // p), num_nodes=num_nodes,
+                            procs_per_node=procs_per_node, k_lanes=k_lanes,
+                            faults=faults),
+            api.PlanRequest("alltoall", max(1, act // (p * p)),
+                            num_nodes=num_nodes,
+                            procs_per_node=procs_per_node, k_lanes=k_lanes,
+                            faults=faults),
+        ]
+        plans = api.plan_batch(reqs)
+        obs_metrics.counter("engine.collective_plans").inc(len(plans))
+        if TRACER:
+            TRACER.event("engine.plan_collectives",
+                         mesh=(num_nodes, procs_per_node, k_lanes),
+                         algs={pl.op: pl.algorithm for pl in plans})
+        return {pl.op: pl for pl in plans}
+
     def inject_fault(self, event) -> str:
         """Report a mid-run fault (a ``repro.training.elastic.FaultEvent``)
         into the engine: the event is recorded and folded into the monitor's

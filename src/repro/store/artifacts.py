@@ -1,0 +1,451 @@
+"""Versioned on-disk artifact store for compiled schedules and recipes.
+
+Layout (one file per artifact, names fully determined by the key)::
+
+    <root>/v<STORE_SCHEMA_VERSION>/
+        meta.json                       # {"schema": N}
+        <c-regime>/sched-<digest>.npz   # CompiledSchedule entries
+        recipes/recipe-<digest>.npz     # payload-independent recipes
+
+Schedule artifacts are keyed by the full process-cache key of
+``repro.core.schedule_ir.compiled_schedule`` — ``(op, algorithm,
+num_nodes, procs_per_node, k_lanes, k, c, root, optimize,
+pipeline_fingerprint, fault_fingerprint)`` — which carries the machine
+shape (the topology triple), the payload, the optimizer pipeline
+fingerprint, and the fault fingerprint.  The digest is the sha1 of the
+canonical JSON of that tuple, so one key maps to exactly one file name:
+concurrent writers race to ``os.replace`` byte-identical content and the
+store can never hold two copies (or a torn half) of an artifact.  The
+``c-regime`` directory level (latency/mixed/bandwidth, from the payload)
+groups entries the way the selector's piecewise fits reason about them.
+
+Recipe artifacts hold the ``(morder, round_ptr)`` permutation a
+``recipe_safe`` pipeline recorded — payload-independent, so one recipe
+replays at every payload size; their key is the schedule key minus ``c``.
+
+**Versioning and eviction.**  Every artifact header records the store
+schema, the ``PASS_PIPELINE_VERSION``, and (for optimized entries) the
+pipeline fingerprint the entry was built under.  :meth:`warm_start`
+deletes — never loads — any artifact whose pass-pipeline version or
+fingerprint no longer matches the current pipeline
+(``passes.mode_fingerprint``), whose header fails to parse, or whose
+schema predates :data:`STORE_SCHEMA_VERSION` (older ``v*`` directories
+are pruned wholesale).  A schedule cached under a stale optimizer is
+silently wrong to serve; disk is the wrong place to keep it.
+
+**Degraded entries** (the ISSUE 6 keying rule): fault-repaired schedules
+persist under their fault fingerprint — part of the key, hence the file
+name — and warm-start back under the same faulted key.  They are never
+read back as healthy entries, because the healthy key hashes to a
+different file.  Recipes never exist for repairs (repair is not
+``recipe_safe``), so no recipe can smuggle a degraded rewrite either.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import hashlib
+import os
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
+
+__all__ = [
+    "STORE_SCHEMA_VERSION",
+    "ArtifactStore",
+    "c_regime",
+    "default_store_root",
+]
+
+#: Bump when the artifact file format (not the schedule semantics) changes;
+#: warm-start prunes every other ``v*`` directory.
+STORE_SCHEMA_VERSION = 1
+
+#: ``REPRO_STORE`` overrides the on-disk location; the default lives under
+#: the ignored ``artifacts/`` directory next to the forensics dumps.
+_ENV_VAR = "REPRO_STORE"
+_DEFAULT_ROOT = os.path.join("artifacts", "schedule_store")
+
+
+def default_store_root() -> str:
+    """The store root: ``$REPRO_STORE`` or ``artifacts/schedule_store``."""
+    return os.environ.get(_ENV_VAR) or _DEFAULT_ROOT
+
+
+def c_regime(c: int) -> str:
+    """Payload regime bucket for the directory layout: the latency regime
+    (alpha-dominated small blocks), the bandwidth regime (beta-dominated),
+    and the mixed band between — the same coarse bands the selector's
+    piecewise-affine fits resolve knees inside."""
+    if c <= 64:
+        return "latency"
+    if c <= 8192:
+        return "mixed"
+    return "bandwidth"
+
+
+def _canon(key: tuple) -> str:
+    return json.dumps(list(key), separators=(",", ":"))
+
+
+def _digest(kind: str, key: tuple) -> str:
+    return hashlib.sha1(f"{kind}|{_canon(key)}".encode()).hexdigest()[:20]
+
+
+class ArtifactStore:
+    """Atomic, schema-versioned persistence for the schedule cache.
+
+    Thread-safe by construction rather than by locking: every write goes
+    to a unique temporary file in the destination directory and is
+    published with one ``os.replace`` — readers see either the complete
+    artifact or nothing — and the deterministic key→name mapping makes
+    duplicate artifacts impossible.
+    """
+
+    def __init__(self, root: str | os.PathLike | None = None):
+        self.root = Path(root if root is not None else default_store_root())
+
+    # -- layout ---------------------------------------------------------
+
+    @property
+    def schema_dir(self) -> Path:
+        return self.root / f"v{STORE_SCHEMA_VERSION}"
+
+    def _sched_path(self, key: tuple) -> Path:
+        return (self.schema_dir / c_regime(int(key[6]))
+                / f"sched-{_digest('sched', key)}.npz")
+
+    def _recipe_path(self, rkey: tuple) -> Path:
+        return self.schema_dir / "recipes" / f"recipe-{_digest('recipe', rkey)}.npz"
+
+    def _write_meta(self) -> None:
+        meta = self.schema_dir / "meta.json"
+        if not meta.exists():
+            self.schema_dir.mkdir(parents=True, exist_ok=True)
+            self._atomic_write_bytes(
+                meta, json.dumps({"schema": STORE_SCHEMA_VERSION}).encode()
+            )
+
+    # -- atomic writes --------------------------------------------------
+
+    def _atomic_write_bytes(self, path: Path, data: bytes) -> None:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-", suffix=".part")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _atomic_savez(self, path: Path, header: dict, arrays: dict) -> None:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-", suffix=".part")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, header=np.array(json.dumps(header)), **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- schedule artifacts ---------------------------------------------
+
+    def put_schedule(self, key: tuple, cs) -> Path | None:
+        """Persist one compiled-schedule cache entry; returns the artifact
+        path, or None when the key is already on disk (puts are
+        idempotent and cheap to repeat)."""
+        from repro.core.passes import PASS_PIPELINE_VERSION
+
+        path = self._sched_path(key)
+        if path.exists():
+            return None
+        self._write_meta()
+        header = {
+            "schema": STORE_SCHEMA_VERSION,
+            "kind": "schedule",
+            "key": list(key),
+            "pass_pipeline_version": PASS_PIPELINE_VERSION,
+            "regime": c_regime(int(key[6])),
+            "op": cs.op,
+            "algorithm": cs.algorithm,
+            "p": int(cs.p),
+            "k": int(cs.k),
+            "has_blocks": bool(cs.has_blocks),
+        }
+        arrays = {
+            "src": cs.src,
+            "dst": cs.dst,
+            "elems": cs.elems,
+            "round_ptr": cs.round_ptr,
+        }
+        if cs.has_blocks:
+            arrays["blk_ptr"] = cs.blk_ptr
+            arrays["blk_ids"] = cs.blk_ids
+        self._atomic_savez(path, header, arrays)
+        obs_metrics.counter("store.puts").inc()
+        if TRACER:
+            TRACER.event("store.put", kind="schedule", op=cs.op,
+                         algorithm=cs.algorithm)
+        return path
+
+    def get_schedule(self, key: tuple):
+        """Load one schedule artifact (or None); the header key must match
+        the requested key exactly — a digest collision or a hand-edited
+        file must not serve the wrong schedule."""
+        path = self._sched_path(key)
+        if not path.exists():
+            return None
+        header, obj = self._load_schedule(path)
+        if tuple(header["key"]) != tuple(key):
+            return None
+        return obj
+
+    def _load_schedule(self, path: Path):
+        from repro.core.schedule_ir import CompiledSchedule
+
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(str(z["header"][()]))
+            if header.get("kind") != "schedule":
+                raise ValueError(f"{path}: not a schedule artifact")
+            cs = CompiledSchedule(
+                op=header["op"],
+                algorithm=header["algorithm"],
+                p=int(header["p"]),
+                k=int(header["k"]),
+                src=z["src"].copy(),
+                dst=z["dst"].copy(),
+                elems=z["elems"].copy(),
+                round_ptr=z["round_ptr"].copy(),
+                blk_ptr=z["blk_ptr"].copy() if header["has_blocks"] else None,
+                blk_ids=z["blk_ids"].copy() if header["has_blocks"] else None,
+            )
+        return header, cs
+
+    # -- recipe artifacts -----------------------------------------------
+
+    def put_recipe(self, rkey: tuple, rec: dict) -> Path | None:
+        """Persist one payload-independent optimizer recipe."""
+        from repro.core.passes import PASS_PIPELINE_VERSION
+
+        path = self._recipe_path(rkey)
+        if path.exists():
+            return None
+        self._write_meta()
+        header = {
+            "schema": STORE_SCHEMA_VERSION,
+            "kind": "recipe",
+            "key": list(rkey),
+            "pass_pipeline_version": PASS_PIPELINE_VERSION,
+            "identity": bool(rec["identity"]),
+            "validated": bool(rec["validated"]),
+        }
+        arrays = {}
+        if not rec["identity"]:
+            arrays["morder"] = rec["morder"]
+            arrays["round_ptr"] = rec["round_ptr"]
+        self._atomic_savez(path, header, arrays)
+        obs_metrics.counter("store.puts").inc()
+        if TRACER:
+            TRACER.event("store.put", kind="recipe", op=rkey[0],
+                         algorithm=rkey[1])
+        return path
+
+    def get_recipe(self, rkey: tuple) -> dict | None:
+        path = self._recipe_path(rkey)
+        if not path.exists():
+            return None
+        header, rec = self._load_recipe(path)
+        if tuple(header["key"]) != tuple(rkey):
+            return None
+        return rec
+
+    def _load_recipe(self, path: Path):
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(str(z["header"][()]))
+            if header.get("kind") != "recipe":
+                raise ValueError(f"{path}: not a recipe artifact")
+            rec = {"identity": bool(header["identity"]),
+                   "validated": bool(header["validated"])}
+            if not rec["identity"]:
+                rec["morder"] = z["morder"].copy()
+                rec["round_ptr"] = z["round_ptr"].copy()
+        return header, rec
+
+    # -- bulk persistence ------------------------------------------------
+
+    def persist_cache(self) -> dict:
+        """Snapshot the live process cache (schedules + recipes) to disk.
+        Idempotent: keys already on disk are skipped.  Degraded (faulted)
+        entries persist under their fault-fingerprinted key — see the
+        module notes — so nothing here can resurface as healthy."""
+        from repro.core.schedule_ir import cache_export
+
+        entries, recipes = cache_export()
+        wrote_s = wrote_r = 0
+        for key, cs in entries.items():
+            if self.put_schedule(key, cs) is not None:
+                wrote_s += 1
+        for rkey, rec in recipes.items():
+            if self.put_recipe(rkey, rec) is not None:
+                wrote_r += 1
+        return {"schedules": wrote_s, "recipes": wrote_r,
+                "cached_schedules": len(entries), "cached_recipes": len(recipes)}
+
+    # -- warm start -------------------------------------------------------
+
+    def _artifact_paths(self) -> list[Path]:
+        if not self.schema_dir.is_dir():
+            return []
+        return sorted(
+            p for p in self.schema_dir.glob("**/*.npz") if p.is_file()
+        )
+
+    def _stale_reason(self, header: dict) -> str | None:
+        """Why an artifact must be evicted, or None when it is servable."""
+        from repro.core.passes import PASS_PIPELINE_VERSION, mode_fingerprint
+        from repro.core.topology import Topology
+
+        if header.get("schema") != STORE_SCHEMA_VERSION:
+            return "schema"
+        key = header.get("key")
+        if not isinstance(key, list):
+            return "malformed-key"
+        if header["kind"] == "schedule":
+            if len(key) != 11:
+                return "malformed-key"
+            optimize, fingerprint = key[8], key[9]
+        else:
+            if len(key) != 10:
+                return "malformed-key"
+            optimize, fingerprint = key[7], key[8]
+        if optimize is None:
+            # unoptimized generator output: pipeline-independent by
+            # construction, valid across pass-pipeline bumps
+            return None
+        if header.get("pass_pipeline_version") != PASS_PIPELINE_VERSION:
+            return "pipeline-version"
+        topo = Topology(int(key[2]), int(key[3]), int(key[4]))
+        try:
+            current = mode_fingerprint(optimize, topo)
+        except ValueError:
+            return "unknown-mode"
+        if fingerprint != current:
+            return "fingerprint"
+        return None
+
+    def evict_stale(self) -> int:
+        """Delete every artifact the current pipeline could not have
+        produced (and any stale ``v*`` schema directory); returns the
+        number of files removed."""
+        import shutil
+
+        removed = 0
+        if self.root.is_dir():
+            for d in self.root.iterdir():
+                if d.is_dir() and d.name.startswith("v") \
+                        and d != self.schema_dir:
+                    shutil.rmtree(d, ignore_errors=True)
+                    removed += 1
+        for path in self._artifact_paths():
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    header = json.loads(str(z["header"][()]))
+                reason = self._stale_reason(header)
+            except Exception:
+                reason = "corrupt"
+            if reason is not None:
+                path.unlink(missing_ok=True)
+                removed += 1
+                obs_metrics.counter("store.evictions").inc()
+                if TRACER:
+                    TRACER.event("store.evict", path=str(path), reason=reason)
+        return removed
+
+    def warm_start(self, *, reset_selector: bool = True) -> dict:
+        """Load every valid artifact into the process cache and recipe
+        table (``schedule_ir.cache_seed``), evicting stale or corrupt
+        files on the way, then invalidate the selector's in-memory caches
+        (``selector_cache_reset``) so no pre-warm-start ``Choice`` can
+        outlive a bumped artifact.  Returns a report dict.
+
+        Seeded keys are marked *store-resident*: any later cache miss on
+        one of them counts as a store recompile
+        (``schedule_cache_info()["store_recompiles"]``) — the regression
+        the load benchmark gates at zero."""
+        from repro.core.schedule_ir import cache_seed
+
+        sp = TRACER.start("store.warm_start", root=str(self.root)) \
+            if TRACER else None
+        evicted = self.evict_stale()
+        entries: dict[tuple, object] = {}
+        recipes: dict[tuple, dict] = {}
+        corrupt = 0
+        for path in self._artifact_paths():
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    header = json.loads(str(z["header"][()]))
+                if header["kind"] == "schedule":
+                    header, cs = self._load_schedule(path)
+                    entries[tuple(header["key"])] = cs
+                else:
+                    header, rec = self._load_recipe(path)
+                    recipes[tuple(header["key"])] = rec
+            except Exception:
+                corrupt += 1
+                path.unlink(missing_ok=True)
+        seeded = cache_seed(entries, recipes, resident=True)
+        if reset_selector:
+            from repro.core.selector import selector_cache_reset
+
+            selector_cache_reset()
+        report = {
+            "schedules": len(entries),
+            "recipes": len(recipes),
+            "seeded": seeded,
+            "evicted": evicted,
+            "corrupt": corrupt,
+        }
+        obs_metrics.counter("store.warm_start.schedules").inc(len(entries))
+        obs_metrics.counter("store.warm_start.recipes").inc(len(recipes))
+        obs_metrics.counter("store.warm_start.evicted").inc(evicted + corrupt)
+        if sp:
+            TRACER.finish(sp, **report)
+        return report
+
+    # -- maintenance ------------------------------------------------------
+
+    def entries(self) -> list[dict]:
+        """Headers of every readable artifact (diagnostics/tests)."""
+        out = []
+        for path in self._artifact_paths():
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    header = json.loads(str(z["header"][()]))
+                header["path"] = str(path)
+                out.append(header)
+            except Exception:
+                continue
+        return out
+
+    def clear(self) -> None:
+        """Delete the store directory tree."""
+        import shutil
+
+        shutil.rmtree(self.root, ignore_errors=True)

@@ -1,0 +1,145 @@
+"""Unified planning API (ISSUE 8): PlanRequest/plan/plan_batch/explain,
+the compiled_schedule PlanRequest overload, and the deprecation shims."""
+
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import Plan, PlanRequest, explain, plan, plan_batch
+from repro.core.faults import FaultSpec
+from repro.core.schedule_ir import compiled_schedule, schedule_cache_clear
+from repro.core.selector import (
+    select,
+    selector_cache_info,
+    selector_cache_reset,
+)
+from repro.core.topology import Topology
+
+MESH = dict(num_nodes=2, procs_per_node=8, k_lanes=2)
+FAMILIES = {"kported", "bruck", "klane", "fulllane"}
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    schedule_cache_clear()
+    selector_cache_reset()
+    yield
+    schedule_cache_clear()
+    selector_cache_reset()
+
+
+def test_plan_request_validation():
+    with pytest.raises(ValueError, match="unknown op"):
+        PlanRequest("gather", 1)
+    with pytest.raises(ValueError, match="payload_elems"):
+        PlanRequest("alltoall", -1)
+    with pytest.raises(ValueError, match="machine shape"):
+        PlanRequest("alltoall", 1, num_nodes=0)
+    assert hash(PlanRequest("alltoall", 87, **MESH)) == hash(
+        PlanRequest("alltoall", 87, **MESH))
+
+
+def test_plan_matches_select():
+    req = PlanRequest("alltoall", 869, **MESH)
+    p = plan(req)
+    ch = select("alltoall", 869, **MESH)
+    assert isinstance(p, Plan)
+    assert (p.algorithm, p.est_us, p.candidates) == (
+        ch.algorithm, ch.est_us, ch.candidates)
+    assert p.request is req and p.op == "alltoall"
+
+
+def test_plan_batch_equals_plan_across_families():
+    # payload/mesh grid whose races cover all four alltoall families
+    reqs = [PlanRequest("alltoall", c, **MESH)
+            for c in (1, 9, 87, 869, 10000, 1 << 20)]
+    reqs += [PlanRequest("alltoall", c, num_nodes=3, procs_per_node=4,
+                         k_lanes=2) for c in (1, 869)]
+    reqs += [PlanRequest("broadcast", 4096, **MESH),
+             PlanRequest("scatter", 512, **MESH)]
+    batch = plan_batch(reqs)
+    singles = [plan(r) for r in reqs]
+    assert batch == singles  # exact, floats included
+    raced = {alg.removeprefix("opt:")
+             for p in batch for alg, _ in p.candidates}
+    assert FAMILIES <= raced
+
+
+def test_plan_batch_mixed_slow_paths():
+    reqs = [
+        PlanRequest("alltoall", 256, **MESH,
+                    faults=FaultSpec(dead_lanes=((1, 1),))),
+        PlanRequest("alltoall", 256, **MESH, deadline_s=0.0),
+        PlanRequest("alltoall", 256, **MESH, optimize=False),
+        PlanRequest("alltoall", 256, **MESH),
+    ]
+    batch = plan_batch(reqs)
+    assert batch == [plan(r) for r in reqs]
+    # optimize=False raced base families only
+    assert not any(a.startswith("opt:") for a, _ in batch[2].candidates)
+    # deadline_s=0 still answers (base rung)
+    assert batch[1].algorithm
+
+
+def test_healthy_faultspec_equals_no_faults():
+    healthy = FaultSpec()
+    assert PlanRequest("alltoall", 87, **MESH, faults=healthy).is_healthy
+    a = plan(PlanRequest("alltoall", 87, **MESH, faults=healthy))
+    b = plan(PlanRequest("alltoall", 87, **MESH))
+    assert (a.algorithm, a.est_us) == (b.algorithm, b.est_us)
+
+
+def test_plan_schedule_materializes_on_real_topology():
+    req = PlanRequest("alltoall", 87, **MESH)
+    p = plan(req)
+    cs = p.schedule()
+    assert cs.p == req.num_nodes * req.procs_per_node
+    base = p.algorithm.removeprefix("opt:")
+    assert cs.algorithm == base
+
+
+def test_compiled_schedule_planrequest_overload():
+    req = PlanRequest("alltoall", 87, **MESH)
+    via_req = compiled_schedule(req, "klane")
+    direct = compiled_schedule("alltoall", "klane", Topology(2, 8, 2), 2, 87)
+    assert via_req is direct  # same cache entry
+    # opt:-prefixed algorithm resolves to base + optimize mode
+    via_opt = compiled_schedule(req, "opt:klane")
+    opt_direct = compiled_schedule("alltoall", "klane", Topology(2, 8, 2),
+                                   2, 87, optimize="color")
+    assert via_opt is opt_direct
+    np.testing.assert_array_equal(via_req.round_ptr, direct.round_ptr)
+    with pytest.raises(TypeError, match="requires an algorithm"):
+        compiled_schedule(req)
+
+
+def test_explain_returns_decision():
+    req = PlanRequest("alltoall", 869, **MESH)
+    dec = explain(req)
+    assert dec.winner == plan(req).algorithm
+    assert dec.candidates and dec.rung_fired == "raced"
+
+
+def test_select_explain_shim_warns_with_unchanged_behavior():
+    with pytest.warns(DeprecationWarning, match="repro.api.explain"):
+        dec = select("alltoall", 869, **MESH, explain=True)
+    fresh = explain(PlanRequest("alltoall", 869, **MESH))
+    assert dec.winner == fresh.winner
+    assert [(c.algorithm, c.status) for c in dec.candidates] == \
+        [(c.algorithm, c.status) for c in fresh.candidates]
+    # plain select() stays warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        select("alltoall", 869, **MESH)
+
+
+def test_selector_cache_reset_clears_lru():
+    plan(PlanRequest("alltoall", 869, **MESH))
+    assert selector_cache_info()["select"]["size"] > 0
+    selector_cache_reset()
+    info = selector_cache_info()
+    assert info["select"]["size"] == 0
+    assert info["sim_payload"]["size"] == 0

@@ -111,6 +111,28 @@ def test_engine_end_to_end():
     assert all(len(r.out_tokens) == 5 for r in fin)
 
 
+def test_engine_plans_decode_collectives():
+    from repro.api import Plan, PlanRequest, plan
+    from repro.core.faults import FaultSpec
+
+    cfg = get_smoke_config("yi_6b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, num_slots=4, capacity=64)
+    plans = eng.plan_decode_collectives(num_nodes=2, procs_per_node=8,
+                                        k_lanes=2)
+    assert set(plans) == {"broadcast", "scatter", "alltoall"}
+    for op, pl in plans.items():
+        assert isinstance(pl, Plan) and pl.op == op
+        assert pl.schedule().p == 16
+        # the engine's batched call equals the per-query planner
+        assert pl == plan(pl.request)
+    # faulted meshes flow through the degradation ladder and still answer
+    deg = eng.plan_decode_collectives(
+        num_nodes=2, procs_per_node=8, k_lanes=2,
+        faults=FaultSpec(dead_lanes=((1, 1),)))
+    assert all(p.algorithm for p in deg.values())
+
+
 def test_engine_greedy_deterministic():
     cfg = get_smoke_config("yi_6b")
     params = lm.init_model(cfg, jax.random.PRNGKey(0))

@@ -19,7 +19,7 @@ from repro.core.passes import (
     repair_schedule,
 )
 from repro.core.faults import FaultSpec
-from repro.core.selector import last_decision, select
+from repro.core.selector import last_decision
 from repro.core.topology import Topology
 from repro.core.validate import check_schedule
 from repro.obs import forensics, metrics
@@ -406,9 +406,12 @@ def test_span_closed_on_pipeline_exception():
 
 
 def test_select_explain_names_every_candidate():
-    kw = dict(num_nodes=3, procs_per_node=4, k_lanes=2)
-    dec = select("alltoall", 869, explain=True, **kw)
-    assert dec.winner == select("alltoall", 869, **kw).algorithm
+    from repro.api import PlanRequest, explain, plan
+
+    req = PlanRequest("alltoall", 869, num_nodes=3, procs_per_node=4,
+                      k_lanes=2)
+    dec = explain(req)
+    assert dec.winner == plan(req).algorithm
     priced = [c for c in dec.candidates if c.status == "priced"]
     assert priced and all(c.est_us is not None for c in priced)
     assert {c.rung for c in dec.candidates} <= {"base", "opt"}
@@ -418,9 +421,12 @@ def test_select_explain_names_every_candidate():
 
 
 def test_select_deadline_zero_skips_opt_rung():
-    dec = select("alltoall", 869, num_nodes=3, procs_per_node=4, k_lanes=2,
-                 faults=FaultSpec(dead_lanes=((1, 1),)), deadline_s=0.0,
-                 explain=True)
+    from repro.api import PlanRequest, explain
+
+    dec = explain(PlanRequest("alltoall", 869, num_nodes=3,
+                              procs_per_node=4, k_lanes=2,
+                              faults=FaultSpec(dead_lanes=((1, 1),)),
+                              deadline_s=0.0))
     opt = [c for c in dec.candidates if c.rung == "opt"]
     assert opt and all(c.status == "deadline-skipped" for c in opt)
     base_priced = [c for c in dec.candidates
@@ -445,6 +451,24 @@ def test_forensics_dump_and_unique_paths(tmp_path):
     assert doc["extra"] == {"k": 1}
     assert any(r["name"] == "before-failure" for r in doc["trace"]["records"])
     assert doc["metrics"]["f.c"]["value"] >= 1
+
+
+def test_forensics_default_dir_is_artifacts(tmp_path, monkeypatch):
+    # ISSUE 8 satellite: unarmed unconditional dumps land in the ignored
+    # artifacts/ directory, not the repo root; REPRO_FORENSICS=dir still
+    # redirects and =1 keeps the legacy cwd behavior
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.delenv("REPRO_FORENSICS", raising=False)
+    p = forensics.dump("stray")
+    assert os.path.dirname(p) == forensics.DEFAULT_DIR
+    assert (tmp_path / "artifacts" / "stray.forensics.json").exists()
+    assert not (tmp_path / "stray.forensics.json").exists()
+    monkeypatch.setenv("REPRO_FORENSICS", str(tmp_path / "armed"))
+    p2 = forensics.dump("stray")
+    assert os.path.dirname(p2) == str(tmp_path / "armed")
+    monkeypatch.setenv("REPRO_FORENSICS", "1")
+    p3 = forensics.dump("stray")
+    assert os.path.dirname(p3) == "."
 
 
 def test_oracle_violation_auto_dump_armed_only(tmp_path):

@@ -1,0 +1,258 @@
+"""ArtifactStore (ISSUE 8): round-trip fidelity, concurrency, versioned
+invalidation, and the degraded-entry keying rule."""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core.passes as passes
+from repro.core.faults import FaultSpec
+from repro.core.schedule_ir import (
+    cache_export,
+    compiled_schedule,
+    schedule_cache_clear,
+    schedule_cache_info,
+    schedule_cache_reset,
+)
+from repro.core.selector import selector_cache_reset
+from repro.core.topology import Topology
+from repro.store import STORE_SCHEMA_VERSION, ArtifactStore, c_regime
+
+TOPO = Topology(2, 8, 2)
+FAMILIES = ("kported", "bruck", "klane", "fulllane")
+
+
+def _arrays(cs) -> dict:
+    out = {"src": cs.src, "dst": cs.dst, "elems": cs.elems,
+           "round_ptr": cs.round_ptr}
+    if cs.has_blocks:
+        out["blk_ptr"] = cs.blk_ptr
+        out["blk_ids"] = cs.blk_ids
+    return out
+
+
+def _assert_identical(a, b, ctx=""):
+    assert set(a) == set(b), ctx
+    for name in a:
+        np.testing.assert_array_equal(a[name], b[name],
+                                      err_msg=f"{ctx}: field {name}")
+
+
+def _build_population():
+    """Every alltoall family + broadcast/scatter + one optimized entry."""
+    for fam in FAMILIES:
+        compiled_schedule("alltoall", fam, TOPO, 2, 87)
+    compiled_schedule("broadcast", "kported", TOPO, 2, 4096)
+    compiled_schedule("scatter", "klane", TOPO, 2, 512)
+    compiled_schedule("alltoall", "klane", TOPO, 2, 869, optimize="color")
+
+
+@pytest.fixture
+def store(tmp_path):
+    schedule_cache_clear()
+    selector_cache_reset()
+    yield ArtifactStore(tmp_path / "store")
+    schedule_cache_clear()
+    selector_cache_reset()
+
+
+def test_round_trip_bit_identical_with_recipe_replay(store):
+    _build_population()
+    counts = store.persist_cache()
+    entries, recipes = cache_export()
+    assert counts["schedules"] == len(entries) > 0
+    assert counts["recipes"] == len(recipes) == 1
+    want = {key: _arrays(cs) for key, cs in entries.items()}
+    # reference for recipe replay at a payload the store never saw
+    ref = _arrays(compiled_schedule("alltoall", "klane", TOPO, 2, 123,
+                                    optimize="color"))
+
+    # simulated restart: the process remembers nothing
+    schedule_cache_clear()
+    selector_cache_reset()
+    report = store.warm_start()
+    assert report["schedules"] == len(want)
+    assert report["recipes"] == 1
+    assert report["seeded"] == len(want)
+    assert report["evicted"] == report["corrupt"] == 0
+    schedule_cache_reset()
+
+    warmed, _ = cache_export()
+    assert set(warmed) == set(want)
+    for key, arrs in want.items():
+        _assert_identical(_arrays(warmed[key]), arrs, ctx=str(key))
+
+    # answering the original queries is all hits, zero store recompiles
+    _build_population()
+    info = schedule_cache_info()
+    assert info["misses"] == 0 and info["store_recompiles"] == 0
+    assert info["hits"] > 0
+
+    # recipe replay: novel payload, optimized — must replay the stored
+    # permutation bit-identically, not re-run the pass pipeline
+    before = schedule_cache_info()
+    got = _arrays(compiled_schedule("alltoall", "klane", TOPO, 2, 123,
+                                    optimize="color"))
+    after = schedule_cache_info()
+    assert after["recipe_hits"] > before["recipe_hits"]
+    assert after["store_recompiles"] == before["store_recompiles"]
+    _assert_identical(got, ref, ctx="recipe replay at novel payload")
+
+
+def test_concurrent_readers_and_writers_no_torn_or_duplicate(store):
+    _build_population()
+    entries, recipes = cache_export()
+    keys = list(entries)
+    want = {key: _arrays(cs) for key, cs in entries.items()}
+    errors: list[BaseException] = []
+    barrier = threading.Barrier(8)
+
+    def writer():
+        try:
+            barrier.wait()
+            for _ in range(3):
+                for key in keys:
+                    store.put_schedule(key, entries[key])
+                for rkey, rec in recipes.items():
+                    store.put_recipe(rkey, rec)
+        except BaseException as e:
+            errors.append(e)
+
+    def reader():
+        try:
+            barrier.wait()
+            for _ in range(3):
+                for key in keys:
+                    cs = store.get_schedule(key)
+                    if cs is not None:
+                        _assert_identical(_arrays(cs), want[key],
+                                          ctx=str(key))
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer if i % 2 else reader)
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+
+    # exactly one artifact per key, no temp leftovers, all readable
+    npz = list(store.schema_dir.glob("**/*.npz"))
+    assert len(npz) == len(keys) + len(recipes)
+    assert not list(store.schema_dir.glob("**/.tmp-*"))
+    for key in keys:
+        _assert_identical(_arrays(store.get_schedule(key)), want[key],
+                          ctx=str(key))
+
+
+def test_pipeline_version_bump_evicts_optimized_only(store, monkeypatch):
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    opt_keys = {k for k in entries if k[8] is not None}
+    plain_keys = set(entries) - opt_keys
+    assert opt_keys and plain_keys
+
+    monkeypatch.setattr(passes, "PASS_PIPELINE_VERSION",
+                        passes.PASS_PIPELINE_VERSION + ".bumped")
+    schedule_cache_clear()
+    selector_cache_reset()
+    report = store.warm_start()
+    # optimized schedule + its recipe evicted; unoptimized output is
+    # pipeline-independent and survives the bump
+    assert report["evicted"] == len(opt_keys) + 1
+    assert report["schedules"] == len(plain_keys)
+    assert report["recipes"] == 0
+    warmed, warmed_recipes = cache_export()
+    assert set(warmed) == plain_keys
+    assert not warmed_recipes
+
+
+def test_stale_schema_dirs_pruned(store):
+    _build_population()
+    store.persist_cache()
+    old = store.root / "v0"
+    old.mkdir(parents=True)
+    (old / "sched-deadbeef.npz").write_bytes(b"junk")
+    assert store.evict_stale() >= 1
+    assert not old.exists()
+    assert store.schema_dir.is_dir()
+
+
+def test_corrupt_artifact_evicted_not_served(store):
+    _build_population()
+    store.persist_cache()
+    victim = next(iter(store.schema_dir.glob("**/sched-*.npz")))
+    victim.write_bytes(b"not an npz")
+    n_before = len(list(store.schema_dir.glob("**/*.npz")))
+    schedule_cache_clear()
+    selector_cache_reset()
+    report = store.warm_start()
+    assert report["evicted"] + report["corrupt"] >= 1
+    assert not victim.exists()
+    assert report["schedules"] == n_before - 2  # victim + the recipe file
+
+
+def test_degraded_entries_never_load_as_healthy(store):
+    spec = FaultSpec(dead_lanes=((1, 1),))
+    healthy = compiled_schedule("alltoall", "klane", TOPO, 2, 87)
+    repaired = compiled_schedule("alltoall", "klane", TOPO, 2, 87,
+                                 faults=spec)
+    store.persist_cache()
+    entries, _ = cache_export()
+    (deg_key,) = [k for k in entries if k[10] is not None]
+    healthy_key = deg_key[:10] + (None,)
+    # the fault fingerprint is part of the key, hence the file name: the
+    # degraded entry and the healthy entry are different artifacts, and
+    # each key serves exactly its own schedule
+    assert store._sched_path(deg_key) != store._sched_path(healthy_key)
+    _assert_identical(_arrays(store.get_schedule(deg_key)),
+                      _arrays(repaired))
+    _assert_identical(_arrays(store.get_schedule(healthy_key)),
+                      _arrays(healthy))
+
+    # a warm start seeds the repair back under the faulted key only:
+    # asking for the healthy schedule can never surface the repair
+    schedule_cache_clear()
+    selector_cache_reset()
+    store.warm_start()
+    warmed, _ = cache_export()
+    assert deg_key in warmed and healthy_key in warmed
+    _assert_identical(_arrays(warmed[deg_key]), _arrays(repaired))
+    _assert_identical(_arrays(warmed[healthy_key]), _arrays(healthy))
+
+
+def test_header_key_mismatch_refused(store):
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    key = next(iter(entries))
+    # a hand-moved file must not serve the wrong schedule
+    src = store._sched_path(key)
+    other = list(entries)[1]
+    dst = store._sched_path(other)
+    dst.unlink()
+    src.rename(dst)
+    assert store.get_schedule(other) is None
+
+
+def test_regime_directories(store):
+    assert c_regime(1) == "latency"
+    assert c_regime(64) == "latency"
+    assert c_regime(65) == "mixed"
+    assert c_regime(8192) == "mixed"
+    assert c_regime(8193) == "bandwidth"
+    compiled_schedule("alltoall", "klane", TOPO, 2, 1)
+    compiled_schedule("alltoall", "klane", TOPO, 2, 1000)
+    compiled_schedule("alltoall", "klane", TOPO, 2, 100000)
+    store.persist_cache()
+    for regime in ("latency", "mixed", "bandwidth"):
+        assert list((store.schema_dir / regime).glob("sched-*.npz"))
+    meta = json.loads((store.schema_dir / "meta.json").read_text())
+    assert meta["schema"] == STORE_SCHEMA_VERSION

@@ -10,7 +10,11 @@ baseline, cell by cell, keyed by ``(table, impl, k, c)``.  The gate fails
 * a baseline cell disappeared from the fresh run, or
 * any cell's ``sim_us`` regressed by more than ``--tol`` (default 5%),
   with an ``--abs-tol`` absolute floor (default 0.05 us) under which a
-  drift never fails.
+  drift never fails.  ``--table-abs-tol TABLE=US`` (repeatable)
+  overrides the floor per table — the ISSUE 8 ``SVC``/``SVC-WALL``
+  service cells carry percentages and wall-clock values, not simulated
+  microseconds, and get wide machine-speed slack without loosening the
+  simulator tables.
 
 The absolute slack exists for zero/near-zero baseline cells (ISSUE 4
 satellite): a purely relative tolerance is meaningless at a ~0 us
@@ -127,11 +131,34 @@ def main(argv=None) -> int:
         "tolerance exceeds it are unaffected; default: %(default)s us)",
     )
     ap.add_argument(
+        "--table-abs-tol",
+        action="append",
+        default=[],
+        dest="table_abs_tol",
+        metavar="TABLE=US",
+        help="per-table --abs-tol override, repeatable (e.g. "
+        "--table-abs-tol SVC=10 --table-abs-tol SVC-WALL=100000); the "
+        "ISSUE 8 service cells are percentages and wall-clock "
+        "milliseconds, not simulated microseconds, so they need their "
+        "own slack",
+    )
+    ap.add_argument(
         "--update-baseline",
         action="store_true",
         help="bless the fresh run as the new baseline and exit 0",
     )
     args = ap.parse_args(argv)
+
+    table_abs_tol: dict[str, float] = {}
+    for spec in args.table_abs_tol:
+        table, eq, val = spec.partition("=")
+        try:
+            if not eq:
+                raise ValueError("missing '='")
+            table_abs_tol[table] = float(val)
+        except ValueError as e:
+            print(f"bench_gate: FAIL — bad --table-abs-tol {spec!r} ({e})")
+            return 2
 
     if not os.path.exists(args.fresh):
         print(
@@ -186,14 +213,15 @@ def main(argv=None) -> int:
             failures.append(f"cell {key} disappeared from the fresh run")
             continue
         b_us, f_us = float(bcell["sim_us"]), float(fcell["sim_us"])
+        abs_tol = table_abs_tol.get(key[0], args.abs_tol)
         # clamped denominator: a zero/near-zero baseline cell must not blow
         # the ratio up (or crash); the abs-tol floor is what governs it
-        rel = (f_us - b_us) / max(b_us, args.abs_tol, 1e-12)
+        rel = (f_us - b_us) / max(b_us, abs_tol, 1e-12)
         if rel > worst_rel:
             worst_key, worst_rel = key, rel
         # abs-tol is a *floor*, not additive slack: cells big enough for the
         # relative tolerance to exceed it keep exactly the old threshold
-        if f_us > max(b_us * (1.0 + args.tol), b_us + args.abs_tol):
+        if f_us > max(b_us * (1.0 + args.tol), b_us + abs_tol):
             failures.append(
                 f"cell {key}: sim_us {b_us:.3f} -> {f_us:.3f} "
                 f"(+{rel * 100:.1f}% > {args.tol * 100:.1f}% tolerance)"

@@ -44,9 +44,9 @@ from repro.core.faults import (
     apply_faults,
     sample_faults,
 )
+from repro.api import PlanRequest, explain
 from repro.core.passes import repair_schedule
 from repro.core.schedule_ir import compiled_schedule
-from repro.core.selector import select
 from repro.core.simulate import simulate
 from repro.core.topology import HYDRA, NVLINK_IB, Machine, Topology
 from repro.core.validate import check_schedule
@@ -154,16 +154,15 @@ def run_schedule_chaos(
     # price-out instead of just showing the surviving winner.
     ladder = []
     for sname, spec in specs.items():
-        dec = select(
+        dec = explain(PlanRequest(
             "alltoall", 256, num_nodes=num_nodes,
             procs_per_node=procs_per_node, k_lanes=k_lanes, faults=spec,
-            explain=True,
-        )
-        dec0 = select(
+        ))
+        dec0 = explain(PlanRequest(
             "alltoall", 256, num_nodes=num_nodes,
             procs_per_node=procs_per_node, k_lanes=k_lanes, faults=spec,
-            deadline_s=0.0, explain=True,
-        )
+            deadline_s=0.0,
+        ))
         ch, ch0 = dec.choice, dec0.choice
         lcell = {
             "scenario": sname,

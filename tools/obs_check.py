@@ -15,9 +15,10 @@ a named ``obs-smoke`` step:
    trace-event export is valid (one JSON document, every complete event
    carries integer ``ts``/``dur``, instants carry a scope) so Perfetto
    loads it.
-3. **Decisions** — ``select(..., explain=True)`` returns a decision record
-   in which every raced candidate is named with a finite price (status
-   ``priced``) and the winner matches the cached-path choice.
+3. **Decisions** — ``repro.api.explain(PlanRequest(...))`` returns a
+   decision record in which every raced candidate is named with a finite
+   price (status ``priced``) and the winner matches the cached-path
+   ``plan()`` choice.
 4. **Metrics** — the run left the expected counters behind
    (``schedule_cache.*``, ``oracle.*``) and the snapshot is
    JSON-serializable.
@@ -137,12 +138,14 @@ def check_exports(tmpdir: str) -> None:
 
 
 def check_decision() -> None:
-    """Contract 3: explain=True names every raced candidate with a price
+    """Contract 3: explain() names every raced candidate with a price
     and agrees with the cached fast path."""
-    from repro.core.selector import last_decision, select
+    from repro.api import PlanRequest, explain, plan
+    from repro.core.selector import last_decision
 
-    kw = dict(num_nodes=3, procs_per_node=4, k_lanes=2)
-    dec = select("alltoall", 869, explain=True, **kw)
+    req = PlanRequest("alltoall", 869, num_nodes=3, procs_per_node=4,
+                      k_lanes=2)
+    dec = explain(req)
     assert dec.candidates, "decision raced no candidates"
     raced = [c for c in dec.candidates if c.status == "priced"]
     assert raced, "no candidate was priced"
@@ -153,9 +156,9 @@ def check_decision() -> None:
     assert dec.winner in {c.algorithm for c in raced}, (
         "winner is not one of the priced candidates"
     )
-    choice = select("alltoall", 869, **kw)
+    choice = plan(req)
     assert choice.algorithm == dec.winner, (
-        "cached-path choice disagrees with explain=True winner"
+        "cached-path plan() disagrees with explain() winner"
     )
     last = last_decision()
     assert last is not None and last.winner == dec.winner

@@ -1,0 +1,186 @@
+"""Cross-process artifact-store round-trip check (ISSUE 8 CI satellite).
+
+The parent process compiles a representative set of schedules — all four
+alltoall families plus broadcast/scatter, unoptimized and ``opt:`` (so an
+optimizer *recipe* is on disk too) — persists the process cache to a
+temp :class:`~repro.store.ArtifactStore`, and records every cache entry's
+arrays.  It then spawns a **fresh subprocess** (a real restart: no shared
+interpreter state) that warm-starts from the same store directory and
+verifies:
+
+* every persisted schedule loads **bit-identical** (src/dst/elems/
+  round_ptr and the block table compared element-wise against the
+  parent's dump);
+* answering the same queries after warm-start performs **zero store
+  recompiles** (``schedule_cache_info()["store_recompiles"] == 0`` with
+  every lookup a hit);
+* the optimizer recipe replays: compiling the optimized family at a
+  payload the parent **never compiled** is a recipe *hit* in the child
+  (recipe keys drop ``c``), i.e. the warm-started recipe re-applies the
+  stored round order instead of re-running the pass pipeline — and it is
+  not counted as a store recompile (the key was never store-resident).
+
+Exit 0 on success; any mismatch prints the offending key and exits 1.
+
+    PYTHONPATH=src python -m tools.store_check
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+_QUERIES = [
+    # (op, alg, nn, ppn, kl, c, optimize)
+    ("alltoall", "kported", 2, 8, 2, 87, None),
+    ("alltoall", "bruck", 2, 8, 2, 87, None),
+    ("alltoall", "klane", 2, 8, 2, 87, None),
+    ("alltoall", "fulllane", 2, 8, 2, 87, None),
+    ("alltoall", "klane", 2, 8, 2, 869, "color"),
+    ("broadcast", "kported", 3, 4, 2, 4096, None),
+    ("scatter", "klane", 3, 4, 2, 512, None),
+]
+
+
+def _build(root: str) -> dict:
+    """Parent half: compile, persist, dump the arrays for comparison."""
+    from repro.core.schedule_ir import (
+        cache_export,
+        compiled_schedule,
+        schedule_cache_clear,
+    )
+    from repro.core.topology import Topology
+    from repro.store import ArtifactStore
+
+    schedule_cache_clear()
+    for op, alg, nn, ppn, kl, c, opt in _QUERIES:
+        compiled_schedule(op, alg, Topology(nn, ppn, kl),
+                          min(kl, ppn), c, optimize=opt)
+    store = ArtifactStore(root)
+    counts = store.persist_cache()
+    entries, recipes = cache_export()
+    dump = {}
+    for key, cs in entries.items():
+        rec = {"src": cs.src.tolist(), "dst": cs.dst.tolist(),
+               "elems": cs.elems.tolist(),
+               "round_ptr": cs.round_ptr.tolist()}
+        if cs.blk_ptr is not None:
+            rec["blk_ptr"] = cs.blk_ptr.tolist()
+            rec["blk_ids"] = cs.blk_ids.tolist()
+        dump[json.dumps(key)] = rec
+    return {"counts": counts, "entries": dump,
+            "recipes": len(recipes)}
+
+
+_CHILD = r"""
+import json, sys
+import numpy as np
+from repro.core.schedule_ir import (
+    compiled_schedule, schedule_cache_info, schedule_cache_reset,
+)
+from repro.core.topology import Topology
+from repro.store import ArtifactStore
+
+root, dump_path = sys.argv[1], sys.argv[2]
+with open(dump_path) as f:
+    parent = json.load(f)
+queries = json.loads(sys.argv[3])
+
+store = ArtifactStore(root)
+report = store.warm_start()
+if report["schedules"] != len(parent["entries"]):
+    sys.exit(f"warm_start loaded {report['schedules']} schedules, "
+             f"parent persisted {len(parent['entries'])}")
+if report["recipes"] != parent["recipes"]:
+    sys.exit(f"warm_start loaded {report['recipes']} recipes, "
+             f"parent had {parent['recipes']}")
+schedule_cache_reset()
+
+failures = []
+for op, alg, nn, ppn, kl, c, opt in queries:
+    cs = compiled_schedule(op, alg, Topology(nn, ppn, kl),
+                           min(kl, ppn), c, optimize=opt)
+    # find the parent's dump for this entry by matching every key field we
+    # can reconstruct; keys are serialized tuples, compare field-wise
+    want = None
+    for skey, rec in parent["entries"].items():
+        key = json.loads(skey)
+        if (key[0], key[1], key[2], key[3], key[4]) == (op, alg, nn, ppn, kl) \
+                and key[6] == c and key[8] == opt:
+            want = rec
+            break
+    if want is None:
+        failures.append(f"no parent dump for {(op, alg, nn, ppn, kl, c)}")
+        continue
+    pairs = [("src", cs.src), ("dst", cs.dst), ("elems", cs.elems),
+             ("round_ptr", cs.round_ptr)]
+    if "blk_ptr" in want:
+        pairs += [("blk_ptr", cs.blk_ptr), ("blk_ids", cs.blk_ids)]
+    for name, arr in pairs:
+        if arr is None or not np.array_equal(
+                np.asarray(arr), np.asarray(want[name])):
+            failures.append(
+                f"{(op, alg, c, opt)}: field {name} not bit-identical")
+
+info = schedule_cache_info()
+if info["store_recompiles"]:
+    failures.append(f"{info['store_recompiles']} store recompile(s) "
+                    "answering warm queries")
+if info["misses"]:
+    failures.append(f"{info['misses']} cache miss(es) on warm queries "
+                    "(expected all hits)")
+
+# recipe replay: an optimized compile at a payload the parent never built
+# must hit the warm-started recipe (recipe keys drop c) and must not count
+# as a store recompile (this exact key was never store-resident)
+op, alg, nn, ppn, kl, c, opt = next(q for q in queries if q[6] is not None)
+before = schedule_cache_info()
+compiled_schedule(op, alg, Topology(nn, ppn, kl), min(kl, ppn), c + 13,
+                  optimize=opt)
+after = schedule_cache_info()
+if after["recipe_hits"] <= before["recipe_hits"]:
+    failures.append("optimized compile at a novel payload did not replay "
+                    "the warm-started recipe")
+if after["store_recompiles"] != before["store_recompiles"]:
+    failures.append("novel-payload compile wrongly counted as a store "
+                    "recompile")
+for line in failures:
+    print(f"store_check(child): FAIL - {line}")
+sys.exit(1 if failures else 0)
+"""
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory(prefix="repro_store_check_") as td:
+        root = os.path.join(td, "store")
+        result = _build(root)
+        n = len(result["entries"])
+        print(f"store_check: parent persisted {result['counts']} "
+              f"({n} cache entries, {result['recipes']} recipes)")
+        dump_path = os.path.join(td, "parent_dump.json")
+        with open(dump_path, "w") as f:
+            json.dump(result, f)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-c", _CHILD, root, dump_path,
+             json.dumps(_QUERIES)],
+            env=env, capture_output=True, text=True)
+        sys.stdout.write(proc.stdout)
+        sys.stderr.write(proc.stderr)
+        if proc.returncode != 0:
+            print("store_check: FAIL — child round-trip failed "
+                  f"(exit {proc.returncode})")
+            return 1
+    print("store_check: OK — cross-process round-trip bit-identical, "
+          "zero store recompiles")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
