@@ -1317,7 +1317,12 @@ class RepairSchedule:
                     relayed_src=int(need_src.sum()),
                     relayed_dst=int(need_dst.sum()),
                 ) if TRACER else None
-                cs = relay_messages(cs, via_src, via_dst)
+                try:
+                    cs = relay_messages(cs, via_src, via_dst)
+                except BaseException:
+                    if rsp:
+                        TRACER.finish(rsp, outcome="error")
+                    raise
                 if rsp:
                     TRACER.finish(rsp, msgs_after=cs.num_msgs)
                 obs_metrics.counter("repair.relayed_msgs").inc(
@@ -1332,7 +1337,12 @@ class RepairSchedule:
             trigger = "relayed" if relayed else "overwidth"
             psp = TRACER.start("repair.repack", k_eff=k_eff,
                                trigger=trigger) if TRACER else None
-            cs = ColorRounds(limit=k_eff, procs_per_node=n).apply(cs)
+            try:
+                cs = ColorRounds(limit=k_eff, procs_per_node=n).apply(cs)
+            except BaseException:
+                if psp:
+                    TRACER.finish(psp, outcome="error")
+                raise
             if psp:
                 TRACER.finish(psp, rounds_after=cs.num_rounds)
             obs_metrics.counter("repair.repacks").inc()
@@ -1396,7 +1406,12 @@ def repair_schedule(
     if validate and new is not cs:
         osp = TRACER.start("repair.oracle") if TRACER else None
         tv = time.perf_counter()
-        report = validate_schedule(new)
+        try:
+            report = validate_schedule(new)
+        except BaseException:
+            if osp:
+                TRACER.finish(osp, outcome="error")
+            raise
         obs_metrics.counter("repair.oracle_checks").inc()
         obs_metrics.gauge("repair.last_oracle_verify_s").set(
             time.perf_counter() - tv
@@ -1541,19 +1556,26 @@ class PassManager:
         validation across passes: None = not yet checked)."""
         sp = TRACER.start("oracle") if TRACER else None
         mode = "full"
-        if self.incremental and prev_ok is not False:
-            window = rewrite_window(cs, new)
-            if (
-                window is not None
-                and window_hop_fraction(cs, new, window) < 0.5
-            ):
-                if prev_ok is None:
-                    prev_ok = validate_schedule(cs).ok
-                if prev_ok:
-                    mode = "incremental"
-                    report = revalidate_schedule(new, prev=cs, window=window)
-        if mode == "full":
-            report = validate_schedule(new)
+        try:
+            if self.incremental and prev_ok is not False:
+                window = rewrite_window(cs, new)
+                if (
+                    window is not None
+                    and window_hop_fraction(cs, new, window) < 0.5
+                ):
+                    if prev_ok is None:
+                        prev_ok = validate_schedule(cs).ok
+                    if prev_ok:
+                        mode = "incremental"
+                        report = revalidate_schedule(
+                            new, prev=cs, window=window
+                        )
+            if mode == "full":
+                report = validate_schedule(new)
+        except BaseException:
+            if sp:
+                TRACER.finish(sp, outcome="error")
+            raise
         obs_metrics.counter(f"oracle.{mode}").inc()
         if sp:
             TRACER.finish(sp, mode=mode, ok=report.ok)

@@ -1089,7 +1089,12 @@ def _optimize_via_recipe(
     if not rec["validated"]:
         osp = TRACER.start("oracle", mode="full", where="recipe") if TRACER \
             else None
-        report = validate_schedule(cs)
+        try:
+            report = validate_schedule(cs)
+        except BaseException:
+            if osp:
+                TRACER.finish(osp, outcome="error")
+            raise
         if osp:
             TRACER.finish(osp, ok=report.ok)
         report.raise_if_invalid()
