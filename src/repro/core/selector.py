@@ -351,101 +351,107 @@ def _select_impl(
     sp = TRACER.start("select", op=op, payload_elems=payload_elems,
                       faults_fp=faults_fp, deadline_s=deadline_s) if TRACER \
         else None
-    t0 = time.monotonic()
-    wall0 = time.perf_counter()
+    try:
+        t0 = time.monotonic()
+        wall0 = time.perf_counter()
 
-    def expired() -> bool:
-        return deadline_s is not None and time.monotonic() - t0 >= deadline_s
+        def expired() -> bool:
+            return deadline_s is not None and time.monotonic() - t0 >= deadline_s
 
-    algs = _candidate_algs(op, race_topo)
-    base_algs = [a for a in algs if not a.startswith("opt:")]
-    # include_opt=False (PlanRequest(optimize=False)) races base families
-    # only — distinct from deadline_s=0, which *records* the opt: rung as
-    # deadline-skipped; an un-requested rung leaves no record at all.
-    opt_algs = [a for a in algs if a.startswith("opt:")] if include_opt else []
+        algs = _candidate_algs(op, race_topo)
+        base_algs = [a for a in algs if not a.startswith("opt:")]
+        # include_opt=False (PlanRequest(optimize=False)) races base families
+        # only — distinct from deadline_s=0, which *records* the opt: rung as
+        # deadline-skipped; an un-requested rung leaves no record at all.
+        opt_algs = [a for a in algs if a.startswith("opt:")] if include_opt else []
 
-    recs: list[CandidateRecord] = []
-    probes = 0
-    candidates: dict[str, float] = {}
-    for alg in base_algs:  # the guaranteed rung: never deadline-gated
-        probes += 1
-        t = _sim_payload(op, alg, payload_elems, num_nodes, procs_per_node,
-                         k_lanes, faults)
-        if t is not None:
-            candidates[alg] = t
-        recs.append(CandidateRecord(
-            algorithm=alg, rung="base",
-            status="priced" if t is not None else "unavailable", est_us=t))
-    for alg in opt_algs:  # the expensive rung: only while under deadline
-        if expired():
+        recs: list[CandidateRecord] = []
+        probes = 0
+        candidates: dict[str, float] = {}
+        for alg in base_algs:  # the guaranteed rung: never deadline-gated
+            probes += 1
+            t = _sim_payload(op, alg, payload_elems, num_nodes, procs_per_node,
+                             k_lanes, faults)
+            if t is not None:
+                candidates[alg] = t
             recs.append(CandidateRecord(
-                algorithm=alg, rung="opt", status="deadline-skipped",
-                est_us=None))
-            continue
-        probes += 1
-        status = "priced"
-        try:
-            t = _sim_payload(op, alg, payload_elems, num_nodes,
-                             procs_per_node, k_lanes, faults)
-        except AssertionError:
-            if faults is None:
-                raise  # healthy opt: oracle failure is a bug, not a mode
-            t = None  # degraded rewrite rejected — fall down the ladder
-            status = "oracle-rejected"
-        if t is not None:
-            candidates[alg] = t
-        elif status == "priced":
-            status = "unavailable"
-        recs.append(CandidateRecord(algorithm=alg, rung="opt",
-                                    status=status, est_us=t))
-
-    if not candidates:
-        # final rung: return the first family that generates at all
-        k = min(race_topo.k_lanes, race_topo.procs_per_node)
-        c = payload_elems if op == "broadcast" else max(1, payload_elems)
-        choice = None
-        for alg in base_algs:
-            try:
-                compiled_schedule(op, alg, race_topo, k, c, faults=faults)
-            except Exception:
+                algorithm=alg, rung="base",
+                status="priced" if t is not None else "unavailable", est_us=t))
+        for alg in opt_algs:  # the expensive rung: only while under deadline
+            if expired():
+                recs.append(CandidateRecord(
+                    algorithm=alg, rung="opt", status="deadline-skipped",
+                    est_us=None))
                 continue
-            choice = Choice(op=op, algorithm=alg, est_us=float("inf"),
-                            candidates=((alg, float("inf")),))
-            break
-        if choice is None:
-            if sp:
-                TRACER.finish(sp, outcome="unusable")
-            raise RuntimeError(
-                f"no {op} family generates on {race_topo} — topology unusable"
+            probes += 1
+            status = "priced"
+            try:
+                t = _sim_payload(op, alg, payload_elems, num_nodes,
+                                 procs_per_node, k_lanes, faults)
+            except AssertionError:
+                if faults is None:
+                    raise  # healthy opt: oracle failure is a bug, not a mode
+                t = None  # degraded rewrite rejected — fall down the ladder
+                status = "oracle-rejected"
+            if t is not None:
+                candidates[alg] = t
+            elif status == "priced":
+                status = "unavailable"
+            recs.append(CandidateRecord(algorithm=alg, rung="opt",
+                                        status=status, est_us=t))
+
+        if not candidates:
+            # final rung: return the first family that generates at all
+            k = min(race_topo.k_lanes, race_topo.procs_per_node)
+            c = payload_elems if op == "broadcast" else max(1, payload_elems)
+            choice = None
+            for alg in base_algs:
+                try:
+                    compiled_schedule(op, alg, race_topo, k, c, faults=faults)
+                except Exception:
+                    continue
+                choice = Choice(op=op, algorithm=alg, est_us=float("inf"),
+                                candidates=((alg, float("inf")),))
+                break
+            if choice is None:
+                if sp:
+                    TRACER.finish(sp, outcome="unusable")
+                    sp = None  # closed here: the boundary handler must not
+                raise RuntimeError(
+                    f"no {op} family generates on {race_topo} — topology unusable"
+                )
+            decision = Decision(
+                op=op, payload_elems=payload_elems, num_nodes=num_nodes,
+                procs_per_node=procs_per_node, k_lanes=k_lanes,
+                faults_fp=faults_fp, deadline_s=deadline_s,
+                candidates=tuple(recs), winner=choice.algorithm,
+                est_us=choice.est_us, margin_us=None,
+                rung_fired="final-fallback", probes=probes,
+                wall_s=time.perf_counter() - wall0, choice=choice,
             )
-        decision = Decision(
-            op=op, payload_elems=payload_elems, num_nodes=num_nodes,
-            procs_per_node=procs_per_node, k_lanes=k_lanes,
-            faults_fp=faults_fp, deadline_s=deadline_s,
-            candidates=tuple(recs), winner=choice.algorithm,
-            est_us=choice.est_us, margin_us=None,
-            rung_fired="final-fallback", probes=probes,
-            wall_s=time.perf_counter() - wall0, choice=choice,
-        )
-    else:
-        ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
-        best, est = ranked[0]
-        choice = Choice(op=op, algorithm=best, est_us=est, candidates=ranked)
-        decision = Decision(
-            op=op, payload_elems=payload_elems, num_nodes=num_nodes,
-            procs_per_node=procs_per_node, k_lanes=k_lanes,
-            faults_fp=faults_fp, deadline_s=deadline_s,
-            candidates=tuple(recs), winner=best, est_us=est,
-            margin_us=ranked[1][1] - est if len(ranked) > 1 else None,
-            rung_fired="raced", probes=probes,
-            wall_s=time.perf_counter() - wall0, choice=choice,
-        )
-    obs_metrics.counter("selector.races").inc()
-    obs_metrics.counter(f"selector.rung.{decision.rung_fired}").inc()
-    if sp:
-        TRACER.finish(sp, winner=decision.winner, est_us=decision.est_us,
-                      rung_fired=decision.rung_fired, probes=probes,
-                      margin_us=decision.margin_us)
+        else:
+            ranked = tuple(sorted(candidates.items(), key=lambda kv: kv[1]))
+            best, est = ranked[0]
+            choice = Choice(op=op, algorithm=best, est_us=est, candidates=ranked)
+            decision = Decision(
+                op=op, payload_elems=payload_elems, num_nodes=num_nodes,
+                procs_per_node=procs_per_node, k_lanes=k_lanes,
+                faults_fp=faults_fp, deadline_s=deadline_s,
+                candidates=tuple(recs), winner=best, est_us=est,
+                margin_us=ranked[1][1] - est if len(ranked) > 1 else None,
+                rung_fired="raced", probes=probes,
+                wall_s=time.perf_counter() - wall0, choice=choice,
+            )
+        obs_metrics.counter("selector.races").inc()
+        obs_metrics.counter(f"selector.rung.{decision.rung_fired}").inc()
+        if sp:
+            TRACER.finish(sp, winner=decision.winner, est_us=decision.est_us,
+                          rung_fired=decision.rung_fired, probes=probes,
+                          margin_us=decision.margin_us)
+    except BaseException:
+        if sp:
+            TRACER.finish(sp, outcome="error")
+        raise
     with _LAST_LOCK:
         _LAST_DECISION = decision
     return decision
