@@ -237,7 +237,12 @@ class ServeEngine:
                 pending = pending[len(n):]
             sp = TRACER.start("decode_step", step=steps) if TRACER else None
             t0 = time.perf_counter()
-            self.step()
+            try:
+                self.step()
+            except BaseException:
+                if sp:
+                    TRACER.finish(sp, outcome="error")
+                raise
             dt = time.perf_counter() - t0
             if sp:
                 TRACER.finish(sp, pos=self.pos)
