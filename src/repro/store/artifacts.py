@@ -43,7 +43,6 @@ different file.  Recipes never exist for repairs (repair is not
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import hashlib
 import os
@@ -378,12 +377,21 @@ class ArtifactStore:
                     TRACER.event("store.evict", path=str(path), reason=reason)
         return removed
 
-    def warm_start(self, *, reset_selector: bool = True) -> dict:
+    def warm_start(self, *, reset_selector: bool = True,
+                   verify: bool = False) -> dict:
         """Load every valid artifact into the process cache and recipe
         table (``schedule_ir.cache_seed``), evicting stale or corrupt
         files on the way, then invalidate the selector's in-memory caches
         (``selector_cache_reset``) so no pre-warm-start ``Choice`` can
         outlive a bumped artifact.  Returns a report dict.
+
+        ``verify=True`` runs the static analyzer
+        (:func:`repro.core.analyze.analyze_schedule`) over every loaded
+        schedule and refuses to seed one that fails — the artifact digest
+        only covers the *key*, so a content-corrupted file (bit rot, a
+        partial write, a hostile edit) loads cleanly and would otherwise
+        be served verbatim to every consumer.  Rejected artifacts are
+        deleted and counted under ``rejected``.
 
         Seeded keys are marked *store-resident*: any later cache miss on
         one of them counts as a store recompile
@@ -393,41 +401,79 @@ class ArtifactStore:
 
         sp = TRACER.start("store.warm_start", root=str(self.root)) \
             if TRACER else None
-        evicted = self.evict_stale()
-        entries: dict[tuple, object] = {}
-        recipes: dict[tuple, dict] = {}
-        corrupt = 0
-        for path in self._artifact_paths():
-            try:
-                with np.load(path, allow_pickle=False) as z:
-                    header = json.loads(str(z["header"][()]))
-                if header["kind"] == "schedule":
-                    header, cs = self._load_schedule(path)
-                    entries[tuple(header["key"])] = cs
-                else:
-                    header, rec = self._load_recipe(path)
-                    recipes[tuple(header["key"])] = rec
-            except Exception:
-                corrupt += 1
-                path.unlink(missing_ok=True)
-        seeded = cache_seed(entries, recipes, resident=True)
-        if reset_selector:
-            from repro.core.selector import selector_cache_reset
+        try:
+            evicted = self.evict_stale()
+            entries: dict[tuple, object] = {}
+            recipes: dict[tuple, dict] = {}
+            corrupt = rejected = 0
+            for path in self._artifact_paths():
+                try:
+                    with np.load(path, allow_pickle=False) as z:
+                        header = json.loads(str(z["header"][()]))
+                    if header["kind"] == "schedule":
+                        header, cs = self._load_schedule(path)
+                        if verify and not self._statically_ok(header, cs):
+                            rejected += 1
+                            path.unlink(missing_ok=True)
+                            continue
+                        entries[tuple(header["key"])] = cs
+                    else:
+                        header, rec = self._load_recipe(path)
+                        recipes[tuple(header["key"])] = rec
+                except Exception:
+                    corrupt += 1
+                    path.unlink(missing_ok=True)
+            seeded = cache_seed(entries, recipes, resident=True)
+            if reset_selector:
+                from repro.core.selector import selector_cache_reset
 
-            selector_cache_reset()
-        report = {
-            "schedules": len(entries),
-            "recipes": len(recipes),
-            "seeded": seeded,
-            "evicted": evicted,
-            "corrupt": corrupt,
-        }
-        obs_metrics.counter("store.warm_start.schedules").inc(len(entries))
-        obs_metrics.counter("store.warm_start.recipes").inc(len(recipes))
-        obs_metrics.counter("store.warm_start.evicted").inc(evicted + corrupt)
+                selector_cache_reset()
+            report = {
+                "schedules": len(entries),
+                "recipes": len(recipes),
+                "seeded": seeded,
+                "evicted": evicted,
+                "corrupt": corrupt,
+                "rejected": rejected,
+            }
+            obs_metrics.counter("store.warm_start.schedules").inc(
+                len(entries))
+            obs_metrics.counter("store.warm_start.recipes").inc(len(recipes))
+            obs_metrics.counter("store.warm_start.evicted").inc(
+                evicted + corrupt + rejected)
+        except BaseException:
+            if sp:
+                TRACER.finish(sp, outcome="error")
+            raise
         if sp:
             TRACER.finish(sp, **report)
         return report
+
+    @staticmethod
+    def _statically_ok(header: dict, cs) -> bool:
+        """``warm_start(verify=True)`` gate: a loaded schedule must pass
+        the static analyzer's error-severity checks before it may be
+        seeded into the process cache.  The node partitioning comes from
+        the cache key (``key[3]`` is ``procs_per_node``); budget checks
+        default to warnings, so only structural corruption (bad CSR,
+        rank out of range, dead messages, broken conservation) rejects.
+        Fault-degraded artifacts (``key[10]`` set) skip the conservation
+        gate: a reverted repair legitimately fails degraded budgets, and
+        relay rewrites re-apportion payloads."""
+        from repro.core.analyze import analyze_schedule
+
+        key = header.get("key") or []
+        if len(key) > 10 and key[10] is not None:
+            return True
+        n = int(key[3]) if len(key) > 3 else None
+        try:
+            report = analyze_schedule(cs, procs_per_node=n)
+        except Exception:
+            return False
+        if not report.ok:
+            obs_metrics.counter("store.warm_start.rejects").inc()
+            return False
+        return True
 
     # -- maintenance ------------------------------------------------------
 

@@ -20,6 +20,13 @@ verifies:
   stored round order instead of re-running the pass pipeline — and it is
   not counted as a store recompile (the key was never store-resident).
 
+A second restart drives the ISSUE 9 verification gate: the parent
+*content-corrupts* one persisted schedule in place (tampered ``elems``
+under the original header — the digest only covers the key, so the file
+still loads cleanly) and the child warm-starts with ``verify=True``; the
+static analyzer must reject exactly the tampered artifact and seed the
+rest.
+
 Exit 0 on success; any mismatch prints the offending key and exits 1.
 
     PYTHONPATH=src python -m tools.store_check
@@ -155,6 +162,42 @@ sys.exit(1 if failures else 0)
 """
 
 
+def _corrupt_one(root: str) -> str:
+    """Tamper one schedule artifact's payload in place, keeping the
+    digest-valid filename and header intact, and return its path."""
+    from repro.store import ArtifactStore
+
+    store = ArtifactStore(root)
+    for path in store._artifact_paths():
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(str(z["header"][()]))
+            # scatter/alltoall have exact block semantics, so a payload
+            # tamper is an error-severity conservation breach (broadcast
+            # tolerates uneven chunking and only notes it)
+            if header["kind"] != "schedule" or header["op"] == "broadcast":
+                continue
+            arrays = {k: z[k].copy() for k in z.files if k != "header"}
+        arrays["elems"][0] += 7  # breaks per-(owner, block) conservation
+        store._atomic_savez(path, header, arrays)
+        return str(path)
+    raise RuntimeError("no schedule artifact to corrupt")
+
+
+_CHILD_VERIFY = r"""
+import sys
+from repro.store import ArtifactStore
+
+root, n_expect = sys.argv[1], int(sys.argv[2])
+report = ArtifactStore(root).warm_start(verify=True)
+if report["rejected"] != 1:
+    sys.exit(f"verify=True rejected {report['rejected']} artifact(s), "
+             f"expected exactly the 1 tampered schedule")
+if report["schedules"] != n_expect - 1:
+    sys.exit(f"verify=True seeded {report['schedules']} schedules, "
+             f"expected {n_expect - 1} (all but the tampered one)")
+"""
+
+
 def main() -> int:
     with tempfile.TemporaryDirectory(prefix="repro_store_check_") as td:
         root = os.path.join(td, "store")
@@ -177,8 +220,24 @@ def main() -> int:
             print("store_check: FAIL — child round-trip failed "
                   f"(exit {proc.returncode})")
             return 1
+        # second restart: tampered content must not survive verify=True
+        victim = _corrupt_one(root)
+        proc = subprocess.run(
+            [sys.executable, "-c", _CHILD_VERIFY, root, str(n)],
+            env=env, capture_output=True, text=True)
+        sys.stdout.write(proc.stdout)
+        sys.stderr.write(proc.stderr)
+        if proc.returncode != 0:
+            print(f"store_check: FAIL — warm_start(verify=True) served a "
+                  f"content-corrupted artifact ({victim})")
+            return 1
+        if os.path.exists(victim):
+            print(f"store_check: FAIL — rejected artifact not deleted "
+                  f"({victim})")
+            return 1
     print("store_check: OK — cross-process round-trip bit-identical, "
-          "zero store recompiles")
+          "zero store recompiles, corrupted artifact rejected by "
+          "verify=True")
     return 0
 
 
