@@ -13,6 +13,12 @@ draws) x every alltoall family x both machine cost models, the harness
 * builds the healthy schedule, repairs it (``passes.repair_schedule``),
 * proves the repair with the data-flow oracle (``validate.check_schedule``)
   and checks the delivered final-block set is identical to healthy,
+* runs the static analyzer (``analyze.analyze_schedule``) against the
+  drill's ``FaultSpec`` and embeds the diagnostics in the cell: an
+  *applied* repair must carry zero error-severity diagnostics, while a
+  *reverted* (dead-node) drill must trip at least one degraded-budget
+  error — the analyzer seeing the un-repaired traffic is part of the
+  revert contract,
 * prices healthy-on-healthy vs repaired-on-degraded through the simulator
   (unrepairable scenarios must price at ``inf`` — the revert contract),
 * exercises the selector's bounded-time fallback ladder under the faults.
@@ -45,6 +51,7 @@ from repro.core.faults import (
     sample_faults,
 )
 from repro.api import PlanRequest, explain
+from repro.core.analyze import analyze_schedule
 from repro.core.passes import repair_schedule
 from repro.core.schedule_ir import compiled_schedule
 from repro.core.simulate import simulate
@@ -125,16 +132,32 @@ def run_schedule_chaos(
                         _final_deliveries(repaired) == sig_healthy
                     )
                     unrepairable = bool(spec.dead_nodes)
+                    static = analyze_schedule(
+                        repaired, machine, faults=spec
+                    )
+                    static_ok = (
+                        bool(static.errors) if unrepairable
+                        else not static.errors
+                    )
                     cell.update(
                         repaired=applied,
                         oracle_ok=True,
                         semantics_equal=semantics_equal,
+                        static_errors=len(static.errors),
+                        static_warnings=len(static.warnings),
+                        diagnostics=[
+                            {"check": d.check, "severity": d.severity,
+                             "count": d.count}
+                            for d in static.diagnostics
+                            if d.severity == "error"
+                        ],
                         healthy_us=round(t_healthy, 3),
                         degraded_us=(
                             None if np.isinf(t_deg) else round(t_deg, 3)
                         ),
                         contract_ok=(
                             semantics_equal
+                            and static_ok
                             and (np.isinf(t_deg) if unrepairable
                                  else np.isfinite(t_deg))
                             # an unrepairable scenario must have reverted
