@@ -1,0 +1,297 @@
+"""ISSUE 9 tentpole layer 2: the repo-discipline lint.
+
+Fixture snippets that must pass or fail each rule — including the PR-7
+racy-counter regression the lock-discipline check was built to catch —
+plus the repo-wide run, which must be clean (the same invocation CI and
+``tools/check.sh`` gate on).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from tools.repro_lint import DEFAULT_PATHS, lint_source, main
+
+
+def _rules(snippet):
+    return [v.rule for v in lint_source(snippet, "fixture.py")]
+
+
+# ---------------------------------------------------------------------------
+# L001: lock discipline
+# ---------------------------------------------------------------------------
+
+# the PR-7 regression: cache counters bumped outside the module lock
+_RACY_COUNTER = """
+import threading
+_LOCK = threading.RLock()
+_STATS = {"hits": 0, "misses": 0}
+
+def lookup(key, cache):
+    if key in cache:
+        _STATS["hits"] += 1
+        return cache[key]
+    _STATS["misses"] += 1
+    return None
+"""
+
+_LOCKED_COUNTER = """
+import threading
+_LOCK = threading.RLock()
+_STATS = {"hits": 0, "misses": 0}
+
+def lookup(key, cache):
+    with _LOCK:
+        if key in cache:
+            _STATS["hits"] += 1
+            return cache[key]
+        _STATS["misses"] += 1
+    return None
+"""
+
+
+def test_pr7_racy_counter_fixture_is_caught():
+    assert _rules(_RACY_COUNTER) == ["L001", "L001"]
+
+
+def test_locked_counter_fixture_is_clean():
+    assert _rules(_LOCKED_COUNTER) == []
+
+
+def test_global_rebinding_and_mutator_calls_flagged():
+    snippet = """
+import threading
+_LOCK = threading.Lock()
+_CACHE = {}
+_LAST = None
+
+def remember(key, value):
+    global _LAST
+    _LAST = key
+    _CACHE.update({key: value})
+
+def forget(key):
+    with _LOCK:
+        _CACHE.pop(key, None)
+"""
+    assert _rules(snippet) == ["L001", "L001"]
+
+
+def test_subscript_delete_flagged():
+    snippet = """
+import threading
+_LOCK = threading.Lock()
+_CACHE = {}
+
+def evict(key):
+    del _CACHE[key]
+"""
+    assert _rules(snippet) == ["L001"]
+
+
+def test_no_module_lock_means_no_l001():
+    # a module that owns no lock has nothing to enforce — local dicts and
+    # unlocked module state are out of L001's scope by design
+    snippet = """
+_CACHE = {}
+
+def put(key, value):
+    _CACHE[key] = value
+"""
+    assert _rules(snippet) == []
+
+
+def test_local_shadowing_not_flagged():
+    snippet = """
+import threading
+_LOCK = threading.Lock()
+_CACHE = {}
+
+def scratch():
+    _local = {}
+    _local["x"] = 1
+    _local.update(a=2)
+    return _local
+"""
+    assert _rules(snippet) == []
+
+
+# ---------------------------------------------------------------------------
+# L002: span closure
+# ---------------------------------------------------------------------------
+
+_LEAKY_SPAN = """
+def plan(x):
+    sp = TRACER.start("plan") if TRACER else None
+    result = compute(x)
+    TRACER.finish(sp, rounds=result.rounds)
+    return result
+"""
+
+_FINALLY_SPAN = """
+def plan(x):
+    sp = TRACER.start("plan") if TRACER else None
+    try:
+        return compute(x)
+    finally:
+        TRACER.finish(sp)
+"""
+
+_BOUNDARY_SPAN = """
+def plan(x):
+    sp = TRACER.start("plan") if TRACER else None
+    try:
+        result = compute(x)
+    except BaseException:
+        if sp:
+            TRACER.finish(sp, outcome="error")
+        raise
+    TRACER.finish(sp, rounds=result.rounds)
+    return result
+"""
+
+_SWALLOWING_HANDLER = """
+def plan(x):
+    sp = TRACER.start("plan") if TRACER else None
+    try:
+        result = compute(x)
+    except BaseException:
+        if sp:
+            TRACER.finish(sp, outcome="error")
+        return None
+    TRACER.finish(sp, rounds=result.rounds)
+    return result
+"""
+
+
+def test_straight_line_span_leaks():
+    assert _rules(_LEAKY_SPAN) == ["L002"]
+
+
+def test_finally_span_is_clean():
+    assert _rules(_FINALLY_SPAN) == []
+
+
+def test_single_boundary_pattern_is_clean():
+    assert _rules(_BOUNDARY_SPAN) == []
+
+
+def test_handler_without_reraise_is_not_a_boundary():
+    # a handler that swallows the exception closes the span twice on the
+    # error path or not at all — only finish-and-re-raise qualifies
+    assert _rules(_SWALLOWING_HANDLER) == ["L002"]
+
+
+def test_sp_dot_finish_spelling_accepted():
+    snippet = """
+def plan(x):
+    sp = TRACER.start("plan")
+    try:
+        return compute(x)
+    finally:
+        sp.finish()
+"""
+    assert _rules(snippet) == []
+
+
+def test_nested_function_spans_audited_separately():
+    snippet = """
+def outer():
+    sp = TRACER.start("outer")
+    def inner():
+        sq = TRACER.start("inner")
+        TRACER.finish(sq)
+    try:
+        inner()
+    finally:
+        TRACER.finish(sp)
+"""
+    # inner's straight-line close is a leak on inner's own error paths;
+    # outer's finally does not absolve it
+    assert _rules(snippet) == ["L002"]
+
+
+# ---------------------------------------------------------------------------
+# L003: pass annotation
+# ---------------------------------------------------------------------------
+
+
+def test_unannotated_pass_class_flagged():
+    snippet = """
+class ShiftRounds:
+    def apply(self, cs):
+        return cs
+"""
+    assert _rules(snippet) == ["L003"]
+
+
+def test_class_attr_declaration_accepted():
+    snippet = """
+class ShiftRounds:
+    recipe_safe = True
+
+    def apply(self, cs):
+        return cs
+"""
+    assert _rules(snippet) == []
+
+
+def test_init_declaration_accepted():
+    snippet = """
+class ColorLike:
+    def __init__(self, machine=None):
+        self.recipe_safe = machine is None
+
+    def apply(self, cs):
+        return cs
+"""
+    assert _rules(snippet) == []
+
+
+def test_non_pass_apply_signatures_ignored():
+    snippet = """
+class Widget:
+    def apply(self):
+        return 1
+"""
+    assert _rules(snippet) == []
+
+
+# ---------------------------------------------------------------------------
+# waivers and the driver
+# ---------------------------------------------------------------------------
+
+
+def test_waiver_comment_suppresses_scoped_rule():
+    waived = _RACY_COUNTER.replace(
+        '_STATS["hits"] += 1',
+        '_STATS["hits"] += 1  # lint: ok[L001]')
+    assert _rules(waived) == ["L001"]  # only the un-waived line survives
+
+
+def test_waiver_scoped_to_other_rule_does_not_apply():
+    waived = _RACY_COUNTER.replace(
+        '_STATS["hits"] += 1',
+        '_STATS["hits"] += 1  # lint: ok[L002]')
+    assert [v.rule for v in lint_source(waived, "f.py")] == ["L001", "L001"]
+
+
+def test_unscoped_waiver_applies_to_any_rule():
+    waived = _LEAKY_SPAN.replace(
+        'sp = TRACER.start("plan") if TRACER else None',
+        'sp = TRACER.start("plan") if TRACER else None  # lint: ok')
+    assert _rules(waived) == []
+
+
+def test_syntax_error_reported_not_raised():
+    with pytest.raises(SyntaxError):
+        lint_source("def broken(:\n", "f.py")
+
+
+def test_repo_is_lint_clean(capsys):
+    # the exact gate CI and tools/check.sh run; a regression anywhere in
+    # the lint surface fails this test with the violation list printed
+    rc = main(list(DEFAULT_PATHS))
+    out = capsys.readouterr().out
+    assert rc == 0, f"repro_lint found violations:\n{out}"
+    assert "repro_lint: clean" in out

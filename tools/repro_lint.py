@@ -1,0 +1,371 @@
+"""Repo-discipline lint: AST checks for the invariants ruff cannot see.
+
+Three rules, each born from a real bug class in this repo's history:
+
+``L001`` **lock discipline** (the PR-7 race-detector check).  In any
+    module that owns a module-level lock (a top-level ``NAME =
+    threading.Lock()`` / ``RLock()`` assignment), every *write* to
+    module-level shared state — ``global``-declared rebinding or
+    augmented assignment, subscript stores/deletes, and mutating method
+    calls (``update``/``pop``/``append``/...) on a module-level name —
+    must sit lexically inside a ``with <that lock>:`` block.  PR 7 fixed
+    exactly this: cache-counter ``+= 1`` races outside ``_LOCK``.
+
+``L002`` **span closure**.  Every ``sp = TRACER.start(...)`` must reach a
+    ``TRACER.finish(sp, ...)`` (or ``sp.finish(...)``) on *all* paths out
+    of the function.  Accepted shapes: a ``try/finally`` whose
+    ``finally`` closes the span, or the repo's documented single-boundary
+    pattern — an ``except`` handler that closes the span and re-raises,
+    *plus* a normal-path close.  A straight-line ``start ... finish``
+    leaks the span whenever the code in between raises, which corrupts
+    the flight recorder's open-span stack for every later span.
+
+``L003`` **pass annotation**.  Every scheduling-pass class (a class
+    defining ``apply(self, cs)``) must declare ``recipe_safe`` — either
+    as a class attribute or as ``self.recipe_safe = ...`` in
+    ``__init__`` — because the schedule cache's recipe layer replays
+    passes by name and silently assumes unannotated passes are safe.
+
+A violation can be waived on its own line with a ``# lint: ok`` comment
+(optionally scoped, e.g. ``# lint: ok[L001]``) when the code is correct
+for a reason the AST cannot express; say why in a neighbouring comment.
+
+Run as ``python -m tools.repro_lint [paths...]`` (defaults to the repo's
+lint surface: ``src/repro``, ``tools``, ``benchmarks``).  Exits non-zero
+on any violation.  ``lint_source(text, filename)`` is the library entry
+point the self-tests drive with fixture snippets.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import sys
+
+__all__ = ["Violation", "lint_source", "lint_file", "main", "DEFAULT_PATHS"]
+
+DEFAULT_PATHS = ("src/repro", "tools", "benchmarks")
+
+#: Container-mutating method names treated as writes under L001.
+_MUTATORS = frozenset({
+    "update", "clear", "pop", "popitem", "setdefault",
+    "append", "extend", "insert", "remove", "discard", "add",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    """``threading.Lock()`` / ``threading.RLock()`` (any attribute chain
+    ending in Lock/RLock, or a bare ``Lock()``)."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else "")
+    return name in ("Lock", "RLock")
+
+
+def _assign_names(node: ast.AST) -> list[str]:
+    """Simple-Name targets of a top-level Assign/AnnAssign."""
+    out: list[str] = []
+    if isinstance(node, ast.Assign):
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                out.append(t.id)
+    elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+        out.append(node.target.id)
+    return out
+
+
+class _Parents(ast.NodeVisitor):
+    """Annotate every node with a ``_parent`` backlink."""
+
+    def generic_visit(self, node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+        super().generic_visit(node)
+
+
+def _ancestors(node: ast.AST):
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_parent", None)
+
+
+def _under_lock(node: ast.AST, locks: frozenset[str]) -> bool:
+    for anc in _ancestors(node):
+        if isinstance(anc, ast.With):
+            for item in anc.items:
+                ctx = item.context_expr
+                if isinstance(ctx, ast.Name) and ctx.id in locks:
+                    return True
+    return False
+
+
+def _enclosing_function(node: ast.AST):
+    for anc in _ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+# --------------------------------------------------------------------------
+# L001: lock discipline
+# --------------------------------------------------------------------------
+
+def _check_locks(tree: ast.Module, path: str, out: list[Violation]) -> None:
+    locks, shared = set(), set()
+    for stmt in tree.body:
+        names = _assign_names(stmt)
+        value = getattr(stmt, "value", None)
+        if names and value is not None and _is_lock_ctor(value):
+            locks.update(names)
+        else:
+            shared.update(names)
+    if not locks:
+        return  # module owns no lock: nothing to enforce
+    locks_f = frozenset(locks)
+    shared -= locks
+
+    # names a function declares ``global``: rebinding them is a write
+    global_decls: dict[ast.AST, set[str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            fn = _enclosing_function(node)
+            if fn is not None:
+                global_decls.setdefault(fn, set()).update(
+                    n for n in node.names if n in shared)
+
+    def flag(node: ast.AST, name: str, what: str) -> None:
+        if not _under_lock(node, locks_f):
+            out.append(Violation(
+                path, node.lineno, "L001",
+                f"{what} of module-level shared state '{name}' outside "
+                f"'with {sorted(locks_f)[0]}' — the PR-7 racy-counter "
+                f"pattern"))
+
+    for node in ast.walk(tree):
+        fn = _enclosing_function(node)
+        if fn is None:
+            continue  # module-level initialization is the definition
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if (isinstance(t, ast.Name)
+                        and t.id in global_decls.get(fn, ())):
+                    flag(node, t.id, "rebinding")
+                elif (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id in shared):
+                    flag(node, t.value.id, "subscript write")
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id in shared):
+                    flag(node, t.value.id, "subscript delete")
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr in _MUTATORS
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in shared):
+                flag(node, f.value.id, f".{f.attr}() mutation")
+
+
+# --------------------------------------------------------------------------
+# L002: span closure
+# --------------------------------------------------------------------------
+
+def _span_start_var(stmt: ast.AST) -> str | None:
+    """Name bound by ``v = TRACER.start(...)`` or the guarded
+    ``v = TRACER.start(...) if TRACER else None`` idiom."""
+    if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+            and isinstance(stmt.targets[0], ast.Name)):
+        return None
+    value = stmt.value
+    if isinstance(value, ast.IfExp):
+        value = value.body
+    if (isinstance(value, ast.Call)
+            and isinstance(value.func, ast.Attribute)
+            and value.func.attr == "start"
+            and isinstance(value.func.value, ast.Name)
+            and value.func.value.id == "TRACER"):
+        return stmt.targets[0].id
+    return None
+
+
+def _is_span_close(node: ast.AST, var: str) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "finish":
+        if isinstance(f.value, ast.Name) and f.value.id == var:
+            return True  # sp.finish(...)
+        if (isinstance(f.value, ast.Name) and f.value.id == "TRACER"
+                and node.args and isinstance(node.args[0], ast.Name)
+                and node.args[0].id == var):
+            return True  # TRACER.finish(sp, ...)
+    return False
+
+
+def _check_spans(tree: ast.Module, path: str, out: list[Violation]) -> None:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        starts: list[tuple[str, int]] = []
+        for node in ast.walk(fn):
+            if _enclosing_function(node) is not fn:
+                continue  # nested defs audit their own spans
+            var = _span_start_var(node)
+            if var is not None:
+                starts.append((var, node.lineno))
+        for var, line in starts:
+            finally_ok = handler_ok = normal_ok = False
+            for node in ast.walk(fn):
+                if _enclosing_function(node) is not fn:
+                    continue
+                if isinstance(node, ast.Try):
+                    for fin in node.finalbody:
+                        if any(_is_span_close(n, var)
+                               for n in ast.walk(fin)):
+                            finally_ok = True
+                elif isinstance(node, ast.ExceptHandler):
+                    closes = any(_is_span_close(n, var)
+                                 for n in ast.walk(node))
+                    raises = any(isinstance(n, ast.Raise)
+                                 for n in ast.walk(node))
+                    if closes and raises:
+                        handler_ok = True
+                elif _is_span_close(node, var):
+                    if not any(isinstance(a, ast.ExceptHandler)
+                               for a in _ancestors(node)):
+                        normal_ok = True
+            if not (finally_ok or (handler_ok and normal_ok)):
+                out.append(Violation(
+                    path, line, "L002",
+                    f"span '{var}' started in {fn.name}() is not closed "
+                    f"on all paths: close it in a 'finally', or use the "
+                    f"single-boundary pattern (an 'except' that finishes "
+                    f"with outcome=\"error\" and re-raises, plus a "
+                    f"normal-path finish)"))
+
+
+# --------------------------------------------------------------------------
+# L003: pass annotation
+# --------------------------------------------------------------------------
+
+def _check_passes(tree: ast.Module, path: str, out: list[Violation]) -> None:
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        is_pass = any(
+            isinstance(m, ast.FunctionDef) and m.name == "apply"
+            and len(m.args.args) >= 2
+            for m in cls.body)
+        if not is_pass:
+            continue
+        declared = any(
+            n == "recipe_safe"
+            for stmt in cls.body for n in _assign_names(stmt))
+        if not declared:
+            for m in cls.body:
+                if isinstance(m, ast.FunctionDef) and m.name == "__init__":
+                    for node in ast.walk(m):
+                        if (isinstance(node, ast.Assign)
+                                and any(isinstance(t, ast.Attribute)
+                                        and t.attr == "recipe_safe"
+                                        and isinstance(t.value, ast.Name)
+                                        and t.value.id == "self"
+                                        for t in node.targets)):
+                            declared = True
+        if not declared:
+            out.append(Violation(
+                path, cls.lineno, "L003",
+                f"pass class '{cls.name}' defines apply() but does not "
+                f"declare recipe_safe — the schedule cache's recipe "
+                f"layer needs it to know whether the rewrite replays "
+                f"under a different payload"))
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<string>") -> list[Violation]:
+    """Lint one module's source text; returns surviving violations."""
+    tree = ast.parse(source, filename=path)
+    _Parents().visit(tree)
+    out: list[Violation] = []
+    _check_locks(tree, path, out)
+    _check_spans(tree, path, out)
+    _check_passes(tree, path, out)
+    lines = source.splitlines()
+    kept = []
+    for v in out:
+        text = lines[v.line - 1] if v.line - 1 < len(lines) else ""
+        if "# lint: ok" in text:
+            tag = text.split("# lint: ok", 1)[1]
+            if not tag.startswith("[") or f"[{v.rule}]" in "# lint: ok" + tag:
+                continue
+        kept.append(v)
+    return kept
+
+
+def lint_file(path: str) -> list[Violation]:
+    with open(path, encoding="utf-8") as fh:
+        return lint_source(fh.read(), path)
+
+
+def _iter_py(paths) -> list[str]:
+    found: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            found.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = [d for d in dirs
+                       if d not in ("__pycache__", ".git")]
+            found.extend(os.path.join(root, f)
+                         for f in files if f.endswith(".py"))
+    return sorted(found)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repo-discipline lint (locks, spans, pass annotations)")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS))
+    args = ap.parse_args(argv)
+    total = 0
+    for path in _iter_py(args.paths):
+        try:
+            violations = lint_file(path)
+        except SyntaxError as exc:
+            print(f"{path}:{exc.lineno}: E999 syntax error: {exc.msg}")
+            total += 1
+            continue
+        for v in violations:
+            print(v)
+        total += len(violations)
+    if total:
+        print(f"repro_lint: {total} violation(s)")
+        return 1
+    print("repro_lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
