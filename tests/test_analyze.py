@@ -1,0 +1,315 @@
+"""ISSUE 9 tentpole layer 1: the static schedule analyzer.
+
+Healthy schedules from every generator family must come back error-free
+on both machine models; deliberately corrupted copies (port-budget
+overflow, class-purity breach, injected dead messages, broken payload
+conservation) must each trip the matching check; lower-bound
+certificates must be finite and >= 1; and ``warm_start(verify=True)``
+must refuse to serve a content-corrupted store artifact.  Numpy-only —
+the CI fast job runs the full matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.analyze import analyze_schedule, certify, lower_bound
+from repro.core.faults import FaultSpec
+from repro.core.passes import repair_schedule
+from repro.core.schedule_ir import compiled_schedule, schedule_cache_clear
+from repro.core.selector import selector_cache_reset
+from repro.core.topology import HYDRA, NVLINK_IB, Machine, Topology
+from repro.obs import forensics
+
+TOPO = Topology(3, 4, 2)
+ALLTOALL_FAMILIES = ["kported", "bruck", "klane", "fulllane"]
+COSTS = {"hydra": HYDRA.cost, "nvlink_ib": NVLINK_IB.cost}
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    schedule_cache_clear()
+    selector_cache_reset()
+    yield
+    schedule_cache_clear()
+    selector_cache_reset()
+
+
+def _machine(cost_name):
+    return Machine(topo=TOPO, cost=COSTS[cost_name])
+
+
+def _a2a(fam, c=7, optimize=None):
+    return compiled_schedule("alltoall", fam, TOPO, 2, c, optimize=optimize)
+
+
+# ---------------------------------------------------------------------------
+# healthy schedules are clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cost_name", list(COSTS))
+@pytest.mark.parametrize("fam", ALLTOALL_FAMILIES)
+@pytest.mark.parametrize("optimize", [None, "color"])
+def test_healthy_alltoall_clean(fam, cost_name, optimize):
+    cs = _a2a(fam, optimize=optimize)
+    report = analyze_schedule(cs, _machine(cost_name))
+    assert report.ok, report.summary()
+    report.raise_if_failed()  # must be a no-op
+
+
+@pytest.mark.parametrize("op,fam,c", [
+    ("broadcast", "kported", 4096),
+    ("broadcast", "fulllane", 4096),
+    ("scatter", "klane", 64),
+    ("scatter", "kported", 64),
+])
+def test_healthy_rooted_ops_clean(op, fam, c):
+    cs = compiled_schedule(op, fam, TOPO, 2, c)
+    for cost_name in COSTS:
+        report = analyze_schedule(cs, _machine(cost_name))
+        assert report.ok, report.summary()
+
+
+def test_partition_free_analysis_without_machine():
+    cs = _a2a("bruck")
+    report = analyze_schedule(cs)
+    assert report.ok
+    # no topology => no lane/purity findings at all
+    assert not any(d.check in ("lane-budget", "class-purity")
+                   for d in report.diagnostics)
+
+
+def test_procs_per_node_must_divide_p():
+    with pytest.raises(ValueError):
+        analyze_schedule(_a2a("klane"), procs_per_node=5)
+
+
+# ---------------------------------------------------------------------------
+# corrupted schedules: each corruption trips its check
+# ---------------------------------------------------------------------------
+
+
+def _checks(report, severity=None):
+    return {d.check for d in report.diagnostics
+            if severity is None or d.severity == severity}
+
+
+@pytest.mark.parametrize("cost_name", list(COSTS))
+@pytest.mark.parametrize("fam", ALLTOALL_FAMILIES)
+def test_self_send_is_dead_message(fam, cost_name):
+    cs = _a2a(fam)
+    dst = cs.dst.copy()
+    dst[0] = cs.src[0]
+    bad = dataclasses.replace(cs, dst=dst, _stats={})
+    report = analyze_schedule(bad, _machine(cost_name))
+    assert not report.ok
+    assert "dead-message" in _checks(report, "error")
+
+
+@pytest.mark.parametrize("fam", ALLTOALL_FAMILIES)
+def test_zero_payload_is_dead_message(fam):
+    cs = _a2a(fam)
+    elems = cs.elems.copy()
+    elems[-1] = 0
+    bad = dataclasses.replace(cs, elems=elems, _stats={})
+    report = analyze_schedule(bad, _machine("hydra"))
+    assert "dead-message" in _checks(report, "error")
+
+
+@pytest.mark.parametrize("cost_name", list(COSTS))
+@pytest.mark.parametrize("fam", ALLTOALL_FAMILIES)
+def test_payload_tamper_breaks_conservation(fam, cost_name):
+    cs = _a2a(fam)
+    elems = cs.elems.copy()
+    elems[min(5, elems.size - 1)] += 3
+    bad = dataclasses.replace(cs, elems=elems, _stats={})
+    report = analyze_schedule(bad, _machine(cost_name))
+    assert not report.ok
+    assert "conservation" in _checks(report, "error"), report.summary()
+
+
+@pytest.mark.parametrize("fam", ALLTOALL_FAMILIES)
+def test_explicit_port_budget_overflow_is_error(fam):
+    # squashing the whole schedule into one round gives every proc ~p-1
+    # concurrent streams — far over any asserted per-port cap
+    cs = _a2a(fam)
+    rp = np.array([0, cs.num_msgs], dtype=cs.round_ptr.dtype)
+    squashed = dataclasses.replace(cs, round_ptr=rp, _stats={})
+    report = analyze_schedule(squashed, _machine("hydra"),
+                              port_budget=cs.k)
+    assert "port-budget" in _checks(report, "error")
+    # the same width without an asserted cap is at most advisory: the
+    # coloring packer over-packs on purpose and the simulator serializes
+    advisory = analyze_schedule(squashed, _machine("hydra"))
+    assert "port-budget" not in _checks(advisory, "error")
+    assert "port-budget" in _checks(advisory, "warning")
+    # the uncorrupted schedule never hard-fails its own declared k
+    clean = analyze_schedule(cs, _machine("hydra"))
+    assert "port-budget" not in _checks(clean, "error")
+
+
+def test_class_purity_breach_is_flagged():
+    # collapsing every round into one forces procs to mix on-node and
+    # off-node traffic in the same (round, proc) cell
+    cs = _a2a("kported")
+    rp = np.array([0, cs.num_msgs], dtype=cs.round_ptr.dtype)
+    mixed = dataclasses.replace(cs, round_ptr=rp, _stats={})
+    report = analyze_schedule(mixed, _machine("hydra"))
+    assert "class-purity" in _checks(report)
+    purity = [d for d in report.diagnostics if d.check == "class-purity"]
+    assert all(d.severity == "warning" for d in purity)
+
+
+def test_broken_round_ptr_is_structure_error():
+    cs = _a2a("klane")
+    rp = cs.round_ptr.copy()
+    rp[-1] = cs.num_msgs + 3  # CSR no longer covers the arrays
+    bad = dataclasses.replace(cs, round_ptr=rp, _stats={})
+    report = analyze_schedule(bad, _machine("hydra"))
+    assert "structure" in _checks(report, "error")
+
+
+def test_out_of_range_rank_is_structure_error():
+    cs = _a2a("bruck")
+    dst = cs.dst.copy()
+    dst[0] = cs.p + 1
+    bad = dataclasses.replace(cs, dst=dst, _stats={})
+    report = analyze_schedule(bad, _machine("hydra"))
+    assert "structure" in _checks(report, "error")
+
+
+# ---------------------------------------------------------------------------
+# degraded budgets under a FaultSpec
+# ---------------------------------------------------------------------------
+
+
+def test_healthy_schedule_fails_degraded_budget():
+    cs = _a2a("kported")
+    spec = FaultSpec(dead_ranks=(TOPO.rank_of(1, 1),))
+    report = analyze_schedule(cs, _machine("hydra"), faults=spec)
+    assert "degraded-budget" in _checks(report, "error")
+
+
+def test_repaired_schedule_passes_degraded_budget():
+    cs = _a2a("kported")
+    spec = FaultSpec(dead_ranks=(TOPO.rank_of(1, 1),))
+    repaired, records = repair_schedule(cs, spec, machine=_machine("hydra"))
+    assert any(r.applied for r in records)
+    report = analyze_schedule(repaired, _machine("hydra"), faults=spec)
+    assert report.ok, report.summary()
+
+
+def test_degraded_checks_require_topology():
+    with pytest.raises(ValueError):
+        analyze_schedule(_a2a("klane"),
+                         faults=FaultSpec(dead_rails=1))
+
+
+# ---------------------------------------------------------------------------
+# lower-bound certificates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cost_name", list(COSTS))
+@pytest.mark.parametrize("fam", ALLTOALL_FAMILIES)
+def test_certificates_finite_and_at_least_one(fam, cost_name):
+    cs = _a2a(fam, c=869, optimize="color")
+    cert = certify(cs, _machine(cost_name), 869)
+    assert np.isfinite(cert["gap_vs_lb"])
+    assert cert["gap_vs_lb"] >= 1.0, cert
+    assert cert["sim_us"] >= cert["time_us"] > 0
+    # rounds_lb bounds k-constrained round counts; the color packer
+    # over-packs rounds (the simulator serializes), so only the
+    # unoptimized schedule must respect the round bound
+    assert cert["rounds_lb"] >= 1
+    plain = _a2a(fam, c=869)
+    assert plain.num_rounds >= cert["rounds_lb"]
+
+
+def test_lower_bound_components():
+    m = _machine("hydra")
+    lb = lower_bound("alltoall", m, 2, 100)
+    assert lb["time_us"] == max(lb["alpha_term_us"], lb["port_term_us"],
+                                lb["lane_term_us"])
+    # scatter's root-injection bound dominates the log term at small k
+    sc = lower_bound("scatter", m, 2, 100)
+    assert sc["rounds_lb"] >= (TOPO.p - 1 + 1) // 2
+    with pytest.raises(ValueError):
+        lower_bound("allreduce", m, 2, 100)
+
+
+# ---------------------------------------------------------------------------
+# raise_if_failed arms forensics like the oracle does
+# ---------------------------------------------------------------------------
+
+
+def test_raise_if_failed_auto_dump_armed_only(tmp_path):
+    cs = _a2a("klane")
+    elems = cs.elems.copy()
+    elems[0] += 11
+    bad = dataclasses.replace(cs, elems=elems, _stats={})
+    report = analyze_schedule(bad, _machine("hydra"))
+    # unarmed: intentional corruption raises but stays silent
+    with pytest.raises(AssertionError):
+        report.raise_if_failed()
+    assert list(tmp_path.iterdir()) == []
+    forensics.enable(str(tmp_path))
+    try:
+        with pytest.raises(AssertionError):
+            report.raise_if_failed()
+    finally:
+        forensics.disable()
+    dumps = list(tmp_path.glob("*.forensics.json"))
+    assert len(dumps) == 1
+    doc = json.loads(dumps[0].read_text())
+    assert doc["reason"] == "static_analysis"
+    assert doc["extra"]["ok"] is False
+
+
+# ---------------------------------------------------------------------------
+# warm_start(verify=True): the store never serves a corrupted schedule
+# ---------------------------------------------------------------------------
+
+
+def test_warm_start_verify_rejects_tampered_artifact(tmp_path):
+    from repro.store import ArtifactStore
+
+    for fam in ALLTOALL_FAMILIES:
+        _a2a(fam, c=87)
+    store = ArtifactStore(tmp_path / "store")
+    counts = store.persist_cache()
+    assert counts["schedules"] == len(ALLTOALL_FAMILIES)
+
+    victim = None
+    for path in store._artifact_paths():
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(str(z["header"][()]))
+            if header["kind"] != "schedule":
+                continue
+            arrays = {k: z[k].copy() for k in z.files if k != "header"}
+        arrays["elems"][0] += 7
+        store._atomic_savez(path, header, arrays)
+        victim = path
+        break
+    assert victim is not None
+
+    # an unverified warm start still serves it (digest covers the key only)
+    schedule_cache_clear()
+    assert store.warm_start()["schedules"] == len(ALLTOALL_FAMILIES)
+
+    schedule_cache_clear()
+    report = store.warm_start(verify=True)
+    assert report["rejected"] == 1
+    assert report["schedules"] == len(ALLTOALL_FAMILIES) - 1
+    assert not victim.exists()  # rejected artifacts are evicted from disk
+
+    # a clean store sails through the verified path
+    schedule_cache_clear()
+    report = store.warm_start(verify=True)
+    assert report["rejected"] == 0
+    assert report["schedules"] == len(ALLTOALL_FAMILIES) - 1
