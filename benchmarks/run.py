@@ -143,9 +143,13 @@ def main() -> None:
         # DEG cells (ISSUE 6) carry the graceful-degradation context: the
         # healthy-machine time, the natively regenerated fallback where one
         # exists, and the fault fingerprint that keyed the repaired entry.
+        # LB cells (ISSUE 9) carry the certificate context: the analytic
+        # bound, the optimized time it certifies, and the round bound
+        # (sim_us on an LB cell IS gap_vs_lb — the gated ratio).
         opt_keys = ("base_us", "rounds_before", "rounds_after", "ported",
                     "opt_wall_s", "passes",
-                    "healthy_us", "native_us", "scenario", "fingerprint")
+                    "healthy_us", "native_us", "scenario", "fingerprint",
+                    "lb_us", "opt_us", "rounds_lb", "gap_vs_lb")
         payload = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "cells": [
