@@ -20,7 +20,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.paper_tables import _cell
 from repro.core.topology import Machine, Topology, TPU_V5E

@@ -191,7 +191,7 @@ def _run_load(threads, total, smoke, store_root, rng):
     info = schedule_cache_info()
     lookups = info["hits"] + info["misses"]
     miss_rate_pct = 100.0 * info["misses"] / lookups if lookups else 0.0
-    all_lats = np.asarray(sorted(x for l in lats for x in l))
+    all_lats = np.asarray(sorted(x for worker in lats for x in worker))
     p50_us = float(np.percentile(all_lats, 50)) * 1e6 if all_lats.size else 0.0
     p99_us = float(np.percentile(all_lats, 99)) * 1e6 if all_lats.size else 0.0
 

@@ -1,0 +1,167 @@
+"""Static-analyzer smoke (ISSUE 9 CI satellite): the analyzer's contract
+on live schedules, in one CHECK_TIMEOUT-bounded run.
+
+Three passes, all deterministic:
+
+1. **Healthy sweep** — every (op, family) x {plain, color-packed} on a
+   small mixed topology, analyzed under both machine cost models: zero
+   error-severity diagnostics anywhere (warnings are expected — the
+   coloring packer over-packs on purpose).
+2. **Corruption sweep** — four deliberate corruptions (self-send,
+   zero-payload message, tampered payload, port budget overflow) injected
+   into an alltoall schedule: each must surface as an error-severity
+   diagnostic of the right check.
+3. **Certificates** — ``certify`` on every alltoall family: the
+   ``gap_vs_lb`` ratio must be finite and >= 1 (the analytic bound is a
+   true lower bound, so a gap under 1 means the bound or the simulator is
+   broken).
+
+Writes the machine-readable diagnostics report (per-schedule summaries,
+certificates, corruption verdicts) to ``--report`` — the artifact both CI
+jobs upload.  Exit 0 iff every contract holds.
+
+    PYTHONPATH=src python -m tools.analyze_check --report analyze_report.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.core.analyze import analyze_schedule, certify
+from repro.core.schedule_ir import compiled_schedule
+from repro.core.simulate import simulate
+from repro.core.topology import HYDRA, NVLINK_IB, Machine, Topology
+
+ALLTOALL_FAMILIES = ("kported", "bruck", "klane", "fulllane")
+ONE_SIDED_FAMILIES = ("kported", "klane", "fulllane")
+
+
+def _healthy_sweep(topo: Topology, payload: int) -> tuple[list, bool]:
+    cells, ok = [], True
+    machines = {"hydra": Machine(topo=topo, cost=HYDRA.cost),
+                "nvlink_ib": Machine(topo=topo, cost=NVLINK_IB.cost)}
+    cases = [("alltoall", f) for f in ALLTOALL_FAMILIES]
+    cases += [(op, f) for op in ("broadcast", "scatter")
+              for f in ONE_SIDED_FAMILIES]
+    for op, fam in cases:
+        for opt in (None, "color"):
+            cs = compiled_schedule(op, fam, topo, topo.k_lanes, payload,
+                                   optimize=opt)
+            for mname, machine in machines.items():
+                rep = analyze_schedule(cs, machine)
+                cells.append({
+                    "op": op, "family": fam, "optimize": opt,
+                    "machine": mname, "summary": rep.summary(),
+                    "errors": len(rep.errors),
+                    "warnings": len(rep.warnings),
+                })
+                if rep.errors:
+                    ok = False
+                    print(f"analyze_check: FAIL — healthy {op}/{fam} "
+                          f"opt={opt} on {mname}: {rep.summary()}")
+    return cells, ok
+
+
+def _corruption_sweep(topo: Topology, machine: Machine) -> tuple[list, bool]:
+    cs = compiled_schedule("alltoall", "kported", topo, topo.k_lanes, 7)
+    mutations = []
+    bad_dst = cs.dst.copy()
+    bad_dst[0] = cs.src[0]
+    mutations.append(("self_send", "dead-message",
+                      dataclasses.replace(cs, dst=bad_dst, _stats={}), {}))
+    bad_elems = cs.elems.copy()
+    bad_elems[1] = 0
+    mutations.append(("zero_payload", "dead-message",
+                      dataclasses.replace(cs, elems=bad_elems, _stats={}),
+                      {}))
+    tampered = cs.elems.copy()
+    tampered[2] += 5
+    mutations.append(("tampered_payload", "conservation",
+                      dataclasses.replace(cs, elems=tampered, _stats={}),
+                      {}))
+    mutations.append(("port_overflow", "port-budget", cs,
+                      {"port_budget": 1}))
+
+    cells, ok = [], True
+    for name, want, bad, kwargs in mutations:
+        rep = analyze_schedule(bad, machine, **kwargs)
+        hit = any(d.check == want for d in rep.errors)
+        cells.append({"corruption": name, "expect": want, "caught": hit,
+                      "summary": rep.summary()})
+        if not hit:
+            ok = False
+            print(f"analyze_check: FAIL — corruption '{name}' not caught "
+                  f"as {want} (report: {rep.summary()})")
+    return cells, ok
+
+
+def _certificate_sweep(topo: Topology, payload: int) -> tuple[list, bool]:
+    machine = Machine(topo=topo, cost=HYDRA.cost)
+    cells, ok = [], True
+    for fam in ALLTOALL_FAMILIES:
+        cs = compiled_schedule("alltoall", fam, topo, topo.k_lanes, payload)
+        sim_us = simulate(cs, machine).time_us
+        cert = certify(cs, machine, payload, sim_us=sim_us)
+        gap = cert["gap_vs_lb"]
+        good = gap is not None and np.isfinite(gap) and gap >= 1.0
+        cells.append({"family": fam, "lb_us": round(cert["time_us"], 4),
+                      "sim_us": round(sim_us, 4),
+                      "gap_vs_lb": round(gap, 4) if good else gap,
+                      "rounds": cert["rounds"],
+                      "rounds_lb": cert["rounds_lb"]})
+        if not good:
+            ok = False
+            print(f"analyze_check: FAIL — alltoall/{fam} certificate gap "
+                  f"{gap!r} (lb={cert['time_us']}us sim={sim_us}us)")
+    return cells, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static-analyzer smoke: healthy sweep, corruption "
+                    "sweep, lower-bound certificates")
+    ap.add_argument("--nodes", type=int, default=3)
+    ap.add_argument("--procs", type=int, default=4)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--payload", type=int, default=7)
+    ap.add_argument("--report", default=None,
+                    help="write the JSON diagnostics report here")
+    args = ap.parse_args(argv)
+
+    topo = Topology(args.nodes, args.procs, args.lanes)
+    healthy, ok1 = _healthy_sweep(topo, args.payload)
+    corrupt, ok2 = _corruption_sweep(
+        topo, Machine(topo=topo, cost=HYDRA.cost))
+    certs, ok3 = _certificate_sweep(topo, args.payload)
+    ok = ok1 and ok2 and ok3
+
+    report = {
+        "kind": "analyze_check",
+        "topology": dataclasses.asdict(topo),
+        "healthy": healthy,
+        "corruptions": corrupt,
+        "certificates": certs,
+        "ok": bool(ok),
+    }
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    print(f"analyze_check: {len(healthy)} healthy cells, "
+          f"{len(corrupt)} corruptions caught, "
+          f"{len(certs)} certificates (worst gap "
+          f"{max(c['gap_vs_lb'] for c in certs):.2f}x)")
+    if not ok:
+        print("analyze_check: FAIL")
+        return 1
+    print("analyze_check: OK — analyzer clean on healthy schedules, "
+          "catches corruption, certificates finite and >= 1")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -65,14 +65,29 @@ fi
 
 # lint (CI-fast-job parity): ruff when installed, else a compile check.
 # The CI fast job runs its own dedicated lint step first, so it sets
-# CHECK_SKIP_LINT=1 to avoid linting the same paths twice.
+# CHECK_SKIP_LINT=1 to avoid linting the same paths twice.  ISSUE 9
+# widened the surface: store, api, serving, and benchmarks are covered too.
+LINT_PATHS=(src/repro/core src/repro/obs src/repro/store src/repro/api.py
+            src/repro/serving benchmarks tools)
 if [[ "${CHECK_SKIP_LINT:-0}" != "1" ]]; then
     if command -v ruff >/dev/null 2>&1; then
-        ruff check src/repro/core src/repro/obs tools
+        ruff check "${LINT_PATHS[@]}"
     else
-        python -m compileall -q src/repro/core src/repro/obs tools
+        python -m compileall -q "${LINT_PATHS[@]}"
     fi
 fi
+
+# custom lint (ISSUE 9 tentpole): the AST discipline rules ruff cannot
+# express — lock-guarded shared-state mutation, tracer-span closure on
+# all paths, and recipe_safe declarations on every scheduling pass.
+run_step "lint-custom" python -m tools.repro_lint
+
+# static-analyzer smoke (ISSUE 9 tentpole): healthy schedules must carry
+# zero error-severity diagnostics, seeded corruptions must be caught, and
+# every lower-bound certificate must be finite and >= 1.  Writes the
+# diagnostics report artifact both CI jobs upload.
+run_step "analyze-smoke" python -m tools.analyze_check \
+    --report analyze_report.json
 
 # chaos smoke (ISSUE 6 CI satellite): seeded fault injection on a small
 # topology — sample faults, repair every alltoall family, oracle-check,
