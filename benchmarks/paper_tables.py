@@ -619,6 +619,46 @@ def table_svc():
     return cells
 
 
+def table_res():
+    """Resilient-serving cells (ISSUE 10): the chaos phase-2 drills from
+    :mod:`tools.chaos` — crash injection, flaky-filesystem IO, and
+    fault-event replanning — emitting RES (deterministic counts: torn/
+    duplicate artifacts, recomputes, quarantines, replans, breaker trips)
+    and RES-WALL (replan latency p99) cells.  Any drill contract breach
+    fails the sweep outright — a regression here is a correctness bug,
+    not a slow cell.  Runs after :func:`table_svc`: the drills clear the
+    process caches too."""
+    from tools.chaos import run_resilience_chaos
+
+    t0 = time.perf_counter()
+    rep = run_resilience_chaos(seed=0)
+    wall = time.perf_counter() - t0
+    if not rep["ok"]:
+        raise RuntimeError(f"resilience drill contract breach: {rep}")
+    crash, flaky, replan = rep["crash"], rep["flaky_io"], rep["replan"]
+    if TRACER:
+        TRACER.event("bench.res", recomputes=flaky["recomputes"],
+                     quarantined=flaky["quarantined"],
+                     breaker_trips=replan["breaker_trips"],
+                     replan_p99_s=replan["replan_p99_s"])
+
+    def cell(table, impl, value, wall_s):
+        return {"table": table, "impl": impl, "k": 0, "c": 0,
+                "sim_us": value, "paper_us": "", "wall_s": wall_s}
+
+    return [
+        cell("RES", "crash_torn", crash["torn"], wall),
+        cell("RES", "crash_duplicates", crash["duplicates"], 0.0),
+        cell("RES", "io_user_failures", flaky["user_failures"], 0.0),
+        cell("RES", "io_recomputes", flaky["recomputes"], 0.0),
+        cell("RES", "io_quarantined", flaky["quarantined"], 0.0),
+        cell("RES", "replan_count", replan["replan_count"], 0.0),
+        cell("RES", "breaker_trips", replan["breaker_trips"], 0.0),
+        cell("RES-WALL", "replan_p99_us",
+             replan["replan_p99_s"] * 1e6, wall),
+    ]
+
+
 ALL_TABLES = [
     table_alltoall_node_vs_network,
     table_broadcast,
@@ -631,6 +671,7 @@ ALL_TABLES = [
     # optimized alltoall cell they noted (ISSUE 9)
     table_lower_bounds,
     table_degraded,
-    # LAST: clears the process caches (see docstring)
+    # LAST two: both clear the process caches (see docstrings)
     table_svc,
+    table_res,
 ]

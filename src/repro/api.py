@@ -29,6 +29,16 @@ returns the ``Choice | Decision`` union)*
 ``explain=True`` union return is deprecated (it warns and forwards
 here).  ``PlanRequest(optimize=False)`` races the base paper families
 only — the one capability the old keyword surface never exposed.
+
+**Engine admission (ISSUE 10).**  The serving engine consumes this API
+through :class:`repro.serving.planner.DecodePlanner`:
+``ServeEngine(..., plan_mesh=(num_nodes, procs_per_node, k_lanes))``
+pins the three decode collectives with one :func:`plan_batch` call at
+construction, and ``replan_deadline_s`` bounds the per-fault-event
+replan (retried under seeded backoff, guarded by the ``engine.replan``
+circuit breaker; a tripped breaker replans with ``deadline_s=0.0`` —
+the deadline-exempt base rung, which every request type guarantees).
+Steady-state decode steps never re-enter the selector race.
 """
 
 from __future__ import annotations

@@ -1153,6 +1153,12 @@ def cache_seed(
 
 
 def schedule_cache_info() -> dict:
+    # the store's race counter rides along so one info() call answers
+    # "is the shared store healthy" too (lazy import: the store imports
+    # this module lazily in the other direction)
+    from repro.store.artifacts import read_race_count
+
+    races = read_race_count()
     with _LOCK:
         return {
             "hits": _CACHE_HITS,
@@ -1164,6 +1170,7 @@ def schedule_cache_info() -> dict:
             "bytes": _cache_bytes(),
             "store_resident": len(_STORE_RESIDENT),
             "store_recompiles": _STORE_RECOMPILES,
+            "store_read_races": races,
         }
 
 

@@ -67,6 +67,8 @@ class ServeEngine:
         sampler: Callable = greedy_sample,
         seed: int = 0,
         monitor=None,
+        plan_mesh: tuple[int, int, int] | None = None,
+        replan_deadline_s: float = 0.25,
     ):
         if not cfg.embed_inputs:
             raise ValueError("serving engine drives token models")
@@ -87,6 +89,21 @@ class ServeEngine:
         self.monitor = monitor
         self.fault_events: list = []
         self.monitor_actions: list[str] = []
+        # store-aware admission (ISSUE 10): with ``plan_mesh`` set the
+        # decode-collective plans are pinned here, once, via plan_batch;
+        # thereafter they replan only on an injected FaultEvent (under
+        # the planner's backoff/deadline budget and circuit breaker)
+        self.planner = None
+        if plan_mesh is not None:
+            from repro.serving.planner import DecodePlanner
+
+            nn, ppn, kl = plan_mesh
+            self.planner = DecodePlanner(
+                num_slots=num_slots, d_model=cfg.d_model,
+                num_codebooks=cfg.num_codebooks,
+                num_nodes=nn, procs_per_node=ppn, k_lanes=kl,
+                replan_deadline_s=replan_deadline_s,
+            )
 
         self._decode = jax.jit(
             lambda p, t, c, i: lm.decode_step(cfg, p, t, c, i)
@@ -165,8 +182,17 @@ class ServeEngine:
         Returns ``{op: Plan}``.  Deliberately jax-free — the planning layer
         prices schedules, it does not run them — so a monitor process can
         call this off the hot path.  Faulted meshes flow through the
-        ISSUE 6 degradation ladder via ``faults``."""
+        ISSUE 6 degradation ladder via ``faults``.
+
+        With a pinned planner (``plan_mesh`` at construction) a query for
+        the pinned mesh is a dict lookup — no re-pricing; the pinned set
+        only moves on :meth:`inject_fault`.  Explicit ``faults`` or a
+        different mesh still price ad hoc."""
         from repro import api
+
+        if self.planner is not None and faults is None \
+                and (num_nodes, procs_per_node, k_lanes) == self.planner.mesh:
+            return self.planner.plans()
 
         p = num_nodes * procs_per_node
         bcast_elems = self.num_slots * max(1, self.cfg.num_codebooks)
@@ -196,13 +222,19 @@ class ServeEngine:
         into the engine: the event is recorded and folded into the monitor's
         warn/evict policy.  Returns the resulting action; without a monitor
         the default policy is kind-based (node faults evict, lane faults
-        warn — lanes are survivable via schedule repair)."""
+        warn — lanes are survivable via schedule repair).
+
+        With a pinned planner the event also triggers exactly one
+        bounded-latency replan of the pinned decode collectives
+        (``DecodePlanner.observe_fault``)."""
         self.fault_events.append(event)
         if self.monitor is not None:
             action = self.monitor.observe_fault(event)
         else:
             action = "evict" if getattr(event, "kind", "node") == "node" else "warn"
         self.monitor_actions.append(action)
+        if self.planner is not None:
+            self.planner.observe_fault(event)
         obs_metrics.counter("engine.fault_events").inc()
         obs_metrics.counter(f"engine.fault_action.{action}").inc()
         if TRACER:

@@ -1,0 +1,277 @@
+"""Resilience primitives and fault-event replanning (ISSUE 10): seeded
+backoff determinism, deadline budgets, breaker transitions, retry glue,
+and the jax-free ``DecodePlanner`` pin/replan contract."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro import api
+from repro.core.resilience import (
+    BackoffPolicy,
+    BreakerOpen,
+    CircuitBreaker,
+    DeadlineBudget,
+    call_with_retries,
+)
+from repro.core.schedule_ir import schedule_cache_clear
+from repro.core.selector import selector_cache_reset
+from repro.serving.planner import DecodePlanner
+from repro.training.elastic import FaultEvent
+
+
+@pytest.fixture(autouse=True)
+def _clean_caches():
+    schedule_cache_clear()
+    selector_cache_reset()
+    yield
+    schedule_cache_clear()
+    selector_cache_reset()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# -- backoff ---------------------------------------------------------------
+
+def test_backoff_is_deterministic_per_seed_and_salt():
+    pol = BackoffPolicy(base_s=0.01, factor=2.0, max_s=0.1, max_attempts=5)
+    a = list(pol.delays("path-a"))
+    b = list(pol.delays("path-a"))
+    assert a == b  # same seed+salt: byte-identical schedule
+    assert list(pol.delays("path-b")) != a  # salts decorrelate
+    assert list(BackoffPolicy(base_s=0.01, max_attempts=5,
+                              seed=7).delays("path-a")) != a
+
+
+def test_backoff_shape_and_caps():
+    pol = BackoffPolicy(base_s=0.01, factor=2.0, max_s=0.05, jitter=0.5,
+                        max_attempts=6)
+    delays = list(pol.delays("x"))
+    assert len(delays) == 5  # max_attempts - 1 sleeps
+    caps = [min(0.01 * 2 ** i, 0.05) for i in range(5)]
+    for d, cap in zip(delays, caps):
+        # jittered into [cap/2, cap]
+        assert cap * 0.5 <= d <= cap
+    assert max(delays) <= 0.05
+
+
+def test_backoff_zero_jitter_is_exact():
+    pol = BackoffPolicy(base_s=0.001, factor=2.0, max_s=1.0, jitter=0.0,
+                        max_attempts=4)
+    assert list(pol.delays()) == [0.001, 0.002, 0.004]
+
+
+# -- deadline budget -------------------------------------------------------
+
+def test_deadline_budget_counts_down_and_clamps():
+    clk = FakeClock()
+    b = DeadlineBudget(1.0, clock=clk)
+    assert b.remaining() == 1.0 and not b.expired()
+    clk.advance(0.75)
+    assert b.remaining() == pytest.approx(0.25)
+    assert b.clamp(10.0) == pytest.approx(0.25)
+    clk.advance(0.5)
+    assert b.expired() and b.remaining() == 0.0
+    with pytest.raises(ValueError):
+        DeadlineBudget(0.0)
+
+
+# -- circuit breaker -------------------------------------------------------
+
+def test_breaker_open_half_open_close_cycle():
+    clk = FakeClock()
+    br = CircuitBreaker("t", failure_threshold=2, reset_s=1.0, clock=clk)
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed"  # one short of the threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow() and br.trip_count == 1
+    clk.advance(0.5)
+    assert not br.allow()  # still inside the reset window
+    clk.advance(0.6)
+    assert br.allow() and br.state == "half-open"
+    br.record_failure()  # failed probe: straight back to open
+    assert br.state == "open" and br.trip_count == 2
+    clk.advance(1.1)
+    assert br.allow()
+    br.record_success()  # healed probe closes
+    assert br.state == "closed" and br.allow()
+    # a success resets the consecutive-failure count
+    br.record_failure()
+    br.record_success()
+    br.record_failure()
+    assert br.state == "closed"
+
+
+# -- call_with_retries -----------------------------------------------------
+
+def test_retry_succeeds_with_policy_delays():
+    pol = BackoffPolicy(base_s=0.01, max_s=0.1, max_attempts=4)
+    slept: list[float] = []
+    state = {"fail": 2}
+
+    def fn():
+        if state["fail"] > 0:
+            state["fail"] -= 1
+            raise OSError("transient")
+        return "ok"
+
+    out = call_with_retries(fn, policy=pol, sleep=slept.append,
+                            name="t", salt="s")
+    assert out == "ok"
+    assert slept == list(pol.delays("s"))[:2]  # the seeded schedule, verbatim
+
+
+def test_retry_exhaustion_reraises():
+    pol = BackoffPolicy(base_s=0.0, max_s=0.0, max_attempts=3)
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        raise OSError("always")
+
+    with pytest.raises(OSError):
+        call_with_retries(fn, policy=pol, sleep=lambda s: None)
+    assert calls["n"] == 3  # max_attempts total tries
+
+
+def test_retry_respects_deadline_budget():
+    clk = FakeClock()
+    budget = DeadlineBudget(1.0, clock=clk)
+    pol = BackoffPolicy(base_s=0.1, max_s=1.0, max_attempts=10)
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        clk.advance(0.6)  # each attempt burns over half the budget
+        raise OSError("slow failure")
+
+    with pytest.raises(OSError):
+        call_with_retries(fn, policy=pol, budget=budget,
+                          sleep=lambda s: None)
+    assert calls["n"] == 2  # second attempt ends past the deadline
+
+
+def test_retry_breaker_refuses_without_calling():
+    clk = FakeClock()
+    br = CircuitBreaker("t", failure_threshold=1, reset_s=10.0, clock=clk)
+    br.record_failure()
+    assert br.state == "open"
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        return "ok"
+
+    with pytest.raises(BreakerOpen):
+        call_with_retries(fn, breaker=br, sleep=lambda s: None)
+    assert calls["n"] == 0
+
+
+# -- DecodePlanner ---------------------------------------------------------
+
+PLANNER_KW = dict(num_slots=4, d_model=128, num_nodes=2, procs_per_node=4,
+                  k_lanes=2, replan_deadline_s=2.0)
+
+
+def test_planner_pins_plans_across_queries():
+    planner = DecodePlanner(**PLANNER_KW)
+    pinned = planner.plans()
+    assert set(pinned) == {"broadcast", "scatter", "alltoall"}
+    for _ in range(5):
+        assert planner.plans() == pinned  # no re-pricing, ever
+    assert planner.replan_count == 0
+
+
+def test_planner_replans_exactly_once_per_event():
+    planner = DecodePlanner(**PLANNER_KW)
+    pinned = planner.plans()
+    rep = planner.observe_fault(FaultEvent(kind="lane", node=0, step=1))
+    assert planner.replan_count == 1
+    assert rep["outcome"] == "replanned"
+    after = planner.plans()
+    # pinned again: further queries do not replan
+    for _ in range(3):
+        assert planner.plans() == after
+    assert planner.replan_count == 1
+    # the replanned set is keyed on the accumulated fault
+    spec = planner.current_faults()
+    assert spec is not None and spec.dead_lanes == ((0, 1),)
+    rep2 = planner.observe_fault(FaultEvent(kind="node", node=1, step=2))
+    assert planner.replan_count == 2
+    assert planner.current_faults().dead_nodes == (1,)
+    assert rep2["faults"] is not None
+
+
+def test_planner_fault_accumulation_counts_rails():
+    planner = DecodePlanner(**PLANNER_KW)
+    planner.observe_fault(FaultEvent(kind="lane", node=0, step=1))
+    planner.observe_fault(FaultEvent(kind="lane", node=0, step=2))
+    assert planner.current_faults().dead_lanes == ((0, 2),)
+    assert planner.replan_count == 2
+
+
+def test_planner_breaker_falls_to_base_rung():
+    state = {"fail": True}
+
+    def flaky(reqs):
+        if reqs and reqs[0].faults is not None \
+                and reqs[0].deadline_s != 0.0 and state["fail"]:
+            raise OSError("planner outage")
+        return api.plan_batch(reqs)
+
+    planner = DecodePlanner(
+        **PLANNER_KW,
+        backoff=BackoffPolicy(base_s=0.0, max_s=0.0, max_attempts=2),
+        breaker=CircuitBreaker("test.replan", failure_threshold=2,
+                               reset_s=30.0),
+        plan_batch_fn=flaky,
+    )
+    rep = planner.observe_fault(FaultEvent(kind="lane", node=0, step=1))
+    # the outage tripped the breaker; the plan set still moved, via the
+    # deadline-exempt base rung (no opt: candidates)
+    assert rep["outcome"] == "base-rung"
+    assert planner.breaker.state == "open"
+    assert planner.replan_count == 1
+    assert not any(pl.algorithm.startswith("opt:")
+                   for pl in planner.plans().values())
+    # breaker still open: the next event goes straight to the base rung
+    rep2 = planner.observe_fault(FaultEvent(kind="lane", node=1, step=2))
+    assert rep2["outcome"] == "base-rung"
+    assert planner.replan_count == 2
+
+
+def test_engine_pins_and_replans_on_fault():
+    jax = pytest.importorskip("jax")
+
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_smoke_config("yi_6b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, num_slots=2, capacity=64,
+                      plan_mesh=(2, 4, 2))
+    pinned = eng.plan_decode_collectives(num_nodes=2, procs_per_node=4,
+                                         k_lanes=2)
+    assert set(pinned) == {"broadcast", "scatter", "alltoall"}
+    # steps do not replan; the pinned dict is served verbatim
+    assert eng.plan_decode_collectives(
+        num_nodes=2, procs_per_node=4, k_lanes=2) == pinned
+    assert eng.planner.replan_count == 0
+    eng.inject_fault(FaultEvent(kind="lane", node=0, step=1))
+    assert eng.planner.replan_count == 1
+    assert len(eng.planner.replan_reports) == 1
+    # a different mesh still prices ad hoc (not the pinned set)
+    other = eng.plan_decode_collectives(num_nodes=3, procs_per_node=4,
+                                        k_lanes=2)
+    assert set(other) == {"broadcast", "scatter", "alltoall"}

@@ -242,6 +242,204 @@ def test_header_key_mismatch_refused(store):
     assert store.get_schedule(other) is None
 
 
+# -- ISSUE 10: shared-store races, bounds, quarantine, crash safety -------
+
+
+def test_torn_artifact_is_read_race_miss_then_republish(store):
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    key = next(iter(entries))
+    path = store._sched_path(key)
+    races0 = schedule_cache_info()["store_read_races"]
+    # a concurrent evictor left a torn half behind
+    path.write_bytes(b"PK\x03\x04 torn mid-evict")
+    assert store.get_schedule(key) is None  # miss, never an exception
+    assert not path.exists()  # the torn file is deleted
+    assert schedule_cache_info()["store_read_races"] == races0 + 1
+    # the caller recomputes and republishes; the store heals
+    assert store.put_schedule(key, entries[key]) is not None
+    _assert_identical(_arrays(store.get_schedule(key)),
+                      _arrays(entries[key]))
+
+
+def test_enoent_mid_read_is_race_not_crash(store):
+    from repro.store.artifacts import set_io_fault_injector
+
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    key = next(iter(entries))
+    races0 = schedule_cache_info()["store_read_races"]
+
+    def vanish(op, path):  # the evictor wins between exists() and load
+        if op == "read":
+            raise FileNotFoundError(path)
+
+    set_io_fault_injector(vanish)
+    try:
+        assert store.get_schedule(key) is None
+    finally:
+        set_io_fault_injector(None)
+    assert schedule_cache_info()["store_read_races"] == races0 + 1
+    # the artifact itself was never torn: with the race gone it serves
+    _assert_identical(_arrays(store.get_schedule(key)),
+                      _arrays(entries[key]))
+
+
+def test_lru_bounds_evict_oldest_and_touch_on_read_protects(store, tmp_path):
+    import os as _os
+
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    paths = store._artifact_paths()
+    assert len(paths) > 3
+    # pin distinct mtimes so LRU order is unambiguous
+    for i, p in enumerate(sorted(paths, key=str)):
+        _os.utime(p, (1_000_000 + i, 1_000_000 + i))
+    bounded = ArtifactStore(tmp_path / "store", max_entries=2)
+    # reading the (soon-to-be) oldest schedule refreshes its mtime:
+    # recently-used entries survive the bound
+    victim_key = min(entries, key=lambda k: str(store._sched_path(k)))
+    victim = bounded._sched_path(victim_key)
+    assert bounded.get_schedule(victim_key) is not None
+    removed = bounded.enforce_bounds()
+    assert removed == len(paths) - 2
+    assert victim.exists()  # touched on read -> newest -> kept
+    assert len(bounded._artifact_paths()) == 2
+    # byte bound: impossible to satisfy -> everything goes
+    assert ArtifactStore(tmp_path / "store", max_bytes=1).enforce_bounds() == 2
+    assert not ArtifactStore(tmp_path / "store").enforce_bounds()  # unbounded
+
+
+def test_budgeted_warm_start_defers_then_verifies_lazily(store, tmp_path):
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    n_sched = len(entries)
+    schedule_cache_clear()
+    selector_cache_reset()
+    fresh = ArtifactStore(tmp_path / "store")
+    report = fresh.warm_start(verify=True, budget_s=1e-9)
+    # the budget expires before the walk: the whole tail defers
+    assert report["deferred"] > 0
+    assert report["deferred"] + report["schedules"] == n_sched
+    assert report["rejected"] == report["corrupt"] == 0
+    assert fresh.deferred_count() == report["deferred"]
+    # first read of a deferred artifact verifies lazily and serves it
+    key = next(iter(entries))
+    _assert_identical(_arrays(fresh.get_schedule(key)),
+                      _arrays(entries[key]))
+    assert fresh.deferred_count() == report["deferred"] - 1
+    # a content-corrupted deferred artifact (valid npz, broken schedule)
+    # is rejected at first read, not served
+    other = next(k for k in entries if k != key)
+    path = fresh._sched_path(other)
+    with fresh._lock:
+        still_deferred = str(path) in fresh._verify_deferred
+    assert still_deferred  # budget_s=1e-9 defers the whole walk bar none
+    header, cs = fresh._load_schedule(path)
+    arrays = _arrays(cs)
+    arrays["dst"] = np.full_like(arrays["dst"], 10 ** 6)  # rank off the mesh
+    fresh._atomic_savez(path, header, arrays)
+    assert fresh.get_schedule(other) is None
+    assert not path.exists()
+
+
+def test_quarantine_after_repeated_read_failures(store):
+    import errno as _errno
+
+    from repro.core.resilience import BackoffPolicy
+    from repro.store.artifacts import set_io_fault_injector
+
+    _build_population()
+    store.persist_cache()
+    entries, _ = cache_export()
+    key = next(iter(entries))
+    flaky = ArtifactStore(store.root,
+                          retry=BackoffPolicy(base_s=0.0, max_s=0.0,
+                                              max_attempts=2),
+                          quarantine_after=2)
+    victim = str(flaky._sched_path(key))
+    calls = {"n": 0}
+
+    def eio(op, path):
+        if op == "read" and path == victim:
+            calls["n"] += 1
+            raise OSError(_errno.EIO, "bad sector", path)
+
+    set_io_fault_injector(eio)
+    try:
+        assert flaky.get_schedule(key) is None  # exhausted retries: fail 1
+        assert victim not in flaky.quarantine_info()["quarantined"]
+        assert flaky.get_schedule(key) is None  # fail 2 -> quarantined
+        assert victim in flaky.quarantine_info()["quarantined"]
+        before = calls["n"]
+        assert flaky.get_schedule(key) is None  # skipped, no IO at all
+        assert calls["n"] == before
+    finally:
+        set_io_fault_injector(None)
+    # other artifacts are untouched by the quarantine
+    other = next(k for k in entries if k != key)
+    assert flaky.get_schedule(other) is not None
+
+
+_CRASH_CHILD = r"""
+import sys
+sys.path.insert(0, "src")
+from repro.core.schedule_ir import cache_export, compiled_schedule
+from repro.core.topology import Topology
+from repro.store import ArtifactStore
+
+store = ArtifactStore(sys.argv[1])
+topo = Topology(2, 4, 2)
+for fam in ("kported", "klane"):
+    compiled_schedule("alltoall", fam, topo, 2, 7)
+store.persist_cache()
+entries, _ = cache_export()
+key = next(iter(entries))
+print("READY", len(entries), flush=True)
+while True:  # rewrite until SIGKILLed mid-publish
+    store._sched_path(key).unlink(missing_ok=True)
+    store.put_schedule(key, entries[key])
+"""
+
+
+def test_crash_mid_publish_leaves_no_torn_or_duplicate(tmp_path):
+    import os as _os
+    import subprocess
+    import sys
+    import time
+
+    root = tmp_path / "crash-store"
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = "src" + _os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen([sys.executable, "-c", _CRASH_CHILD, str(root)],
+                            stdout=subprocess.PIPE, env=env, text=True)
+    try:
+        line = proc.stdout.readline()
+        assert line.startswith("READY")
+        time.sleep(0.2)  # let the rewrite loop spin
+    finally:
+        proc.kill()
+        proc.wait()
+    schedule_cache_clear()
+    selector_cache_reset()
+    store = ArtifactStore(root)
+    report = store.warm_start(verify=True)
+    # the kill may have landed mid-publish: restart sees either the old
+    # or the new artifact — complete, verified, never torn or doubled
+    assert report["corrupt"] == 0 and report["rejected"] == 0
+    assert report["schedules"] >= 1
+    keys = [tuple(h["key"]) for h in store.entries()
+            if h["kind"] == "schedule"]
+    assert len(keys) == len(set(keys))
+    assert not list(store.schema_dir.glob("**/.tmp-*.part"))
+    schedule_cache_clear()
+    selector_cache_reset()
+
+
 def test_regime_directories(store):
     assert c_regime(1) == "latency"
     assert c_regime(64) == "latency"

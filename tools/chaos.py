@@ -27,21 +27,48 @@ Engine-level chaos (``--engine``, needs jax) drives a tiny ``ServeEngine``
 decode loop with a ``StragglerMonitor`` attached, injects a synthetic
 straggler delay plus lane/node ``FaultEvent``s mid-run, and checks the
 monitor escalates warn -> evict and ``plan_remesh_for_faults`` produces the
-deterministic shrink plan.
+deterministic shrink plan.  ISSUE 10 pins the decode-collective plans at
+engine construction and checks every injected fault event triggers exactly
+one bounded-latency replan.
+
+Resilience chaos — phase 2 (``--resilience``, numpy-only, ISSUE 10) runs
+the serving-resilience drills *instead of* the schedule sweep (pass
+``--append`` to extend an existing report file, the way ``check.sh``'s
+``resilience-smoke`` step extends ``chaos_report.json``):
+
+* **crash injection**: a writer subprocess is SIGKILLed mid-store-publish;
+  on restart the store must hold zero torn and zero duplicate artifacts
+  (atomic ``os.replace`` publication), and ``evict_stale`` must clean any
+  orphaned temp files;
+* **flaky filesystem**: a seeded transient-IO injector fails reads under
+  the store; every query must still complete via retry/recompute (zero
+  user-visible failures), a torn file must count as a read race, and a
+  persistently failing artifact must land in quarantine;
+* **fault-event replanning**: a jax-free ``DecodePlanner`` pins plans,
+  replans exactly once per injected ``FaultEvent`` (replan latency p99 is
+  reported), and a failing planning dependency must trip the circuit
+  breaker into the deadline-exempt base rung, then heal through
+  half-open back to closed.
 
 Every run is fully determined by ``--seed`` — CI replays byte-identical
-reports.  Exit code 0 iff every scenario behaved per contract.
+reports (wall-clock fields excluded).  Exit code 0 iff every scenario
+behaved per contract.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import errno
 import json
 import os
+import random
 import shutil
+import subprocess
 import sys
 import tempfile
+import time
+from pathlib import Path
 
 import numpy as np
 
@@ -315,9 +342,14 @@ def run_engine_chaos(*, seed: int) -> dict:
     cfg = get_smoke_config("yi_6b")
     params = lm.init_model(cfg, jax.random.PRNGKey(seed))
     monitor = StragglerMonitor(patience=2)
+    # plan_mesh pins the decode collectives at construction (ISSUE 10):
+    # the live drill below checks each fault event replans exactly once
     eng = ServeEngine(
-        cfg, params, num_slots=2, capacity=64, seed=seed, monitor=monitor
+        cfg, params, num_slots=2, capacity=64, seed=seed, monitor=monitor,
+        plan_mesh=(2, 4, 2),
     )
+    pinned0 = eng.plan_decode_collectives(
+        num_nodes=2, procs_per_node=4, k_lanes=2)
     rng = np.random.default_rng(seed)
     reqs = [
         Request(rid=i, prompt=rng.integers(1, 100, size=4).astype(np.int32),
@@ -354,11 +386,26 @@ def run_engine_chaos(*, seed: int) -> dict:
         eng.fault_events, num_pods=4, data_axis=2, model_axis=1,
         global_batch=32, last_committed_step=100,
     )
+    # live replan contract (ISSUE 10): three fault events -> exactly three
+    # bounded replans of the pinned plan set, each inside the planner's
+    # deadline budget (base-rung fallback included), and the post-fault
+    # pinned set reflects the accumulated degradation
+    replans = eng.planner.replan_reports
+    replan_walls = [r["wall_s"] for r in replans]
+    replan_ok = (
+        eng.planner.replan_count == 3
+        and len(replans) == 3
+        and all(w >= 0.0 for w in replan_walls)
+        and eng.planner.current_faults() is not None
+        and set(eng.plan_decode_collectives(
+            num_nodes=2, procs_per_node=4, k_lanes=2)) == set(pinned0)
+    )
     ok = (
         straggler_evicted
         and a1 == "warn" and a2 == "evict" and a3 == "evict"
         and plan.feasible and plan.mesh_shape[0] == 3
         and plan.global_batch == 24 and plan.restart_step == 100
+        and replan_ok
     )
     return {
         "kind": "engine_chaos",
@@ -368,6 +415,295 @@ def run_engine_chaos(*, seed: int) -> dict:
         "fault_actions": [a1, a2, a3],
         "monitor_actions": eng.monitor_actions,
         "remesh": dataclasses.asdict(plan),
+        "replan_count": eng.planner.replan_count,
+        "replan_outcomes": [r["outcome"] for r in replans],
+        "replan_wall_s": [round(w, 6) for w in replan_walls],
+        "replan_ok": bool(replan_ok),
+        "ok": bool(ok),
+    }
+
+
+# --------------------------------------------------------------------------
+# resilience chaos — phase 2 (ISSUE 10)
+# --------------------------------------------------------------------------
+
+#: crash-drill writer: publish a population once (prove liveness, print
+#: READY), then rewrite artifacts in a tight loop until the parent SIGKILLs
+#: the process — with luck mid-``np.savez`` — so the restart check below
+#: exercises the atomic-publication guarantee for real.
+_CRASH_CHILD = r"""
+import sys
+from repro.core.schedule_ir import cache_export, compiled_schedule
+from repro.core.topology import Topology
+from repro.store.artifacts import ArtifactStore
+
+root = sys.argv[1]
+topo = Topology(3, 4, 2)
+for fam in ("kported", "bruck", "klane", "fulllane"):
+    for c in (1, 2, 3, 64, 1024):
+        compiled_schedule("alltoall", fam, topo, topo.k_lanes, c)
+entries, recipes = cache_export()
+store = ArtifactStore(root)
+for k, v in entries.items():
+    store.put_schedule(k, v)
+for rk, rec in recipes.items():
+    store.put_recipe(rk, rec)
+print("READY", len(entries), flush=True)
+while True:  # rewrite loop: delete + republish, until SIGKILLed
+    for k, v in entries.items():
+        store._sched_path(k).unlink(missing_ok=True)
+        store.put_schedule(k, v)
+"""
+
+
+def run_store_crash_drill(*, seed: int) -> dict:
+    """Kill a store writer mid-publish; the restarted store must hold
+    zero torn and zero duplicate artifacts, and ``evict_stale`` must
+    clean any orphaned ``.tmp-*.part`` left by the kill."""
+    from repro.core.schedule_ir import schedule_cache_clear
+    from repro.core.selector import selector_cache_reset
+    from repro.store.artifacts import ArtifactStore
+
+    root = tempfile.mkdtemp(prefix="chaos_store_crash_")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CRASH_CHILD, root],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env,
+    )
+    ready_line = proc.stdout.readline().strip()
+    ready = ready_line.startswith("READY")
+    time.sleep(0.2)  # let the rewrite loop spin so the kill lands mid-write
+    proc.kill()
+    proc.wait()
+
+    tmp_before = len(list(Path(root).glob("**/.tmp-*.part")))
+    schedule_cache_clear()
+    store = ArtifactStore(root)
+    report = store.warm_start(verify=True)
+    # duplicates: the key->name mapping must stay injective — two readable
+    # files carrying the same header key would double-serve one schedule
+    keys = [tuple(h["key"]) for h in store.entries()]
+    duplicates = len(keys) - len(set(keys))
+    tmp_after = len(list(Path(root).glob("**/.tmp-*.part")))
+    shutil.rmtree(root, ignore_errors=True)
+    schedule_cache_clear()
+    selector_cache_reset()
+
+    contract_ok = (
+        ready
+        and report["corrupt"] == 0          # zero torn artifacts
+        and report["rejected"] == 0         # zero content-corrupt survivors
+        and duplicates == 0                 # zero duplicate artifacts
+        and tmp_after == 0                  # kill leftovers cleaned
+        and report["schedules"] >= 1        # the restart actually served
+    )
+    return {
+        "kind": "store_crash_drill",
+        "seed": seed,
+        "ready": ready,
+        "schedules": report["schedules"],
+        "recipes": report["recipes"],
+        "torn": report["corrupt"],
+        "rejected": report["rejected"],
+        "duplicates": duplicates,
+        "tmp_leftovers_before": tmp_before,
+        "tmp_leftovers_after": tmp_after,
+        "contract_ok": bool(contract_ok),
+    }
+
+
+def run_flaky_io_drill(*, seed: int, rounds: int = 4) -> dict:
+    """Seeded transient-IO injection under the store read path: every
+    query completes via retry or recompute (zero user-visible failures),
+    a torn artifact counts as a read race and is recomputed, and a
+    persistently failing artifact is quarantined, not retried forever."""
+    from repro.core.resilience import BackoffPolicy
+    from repro.core.schedule_ir import (
+        cache_export,
+        compiled_schedule,
+        schedule_cache_clear,
+    )
+    from repro.core.selector import selector_cache_reset
+    from repro.core.topology import Topology
+    from repro.store import artifacts
+    from repro.store.artifacts import ArtifactStore
+
+    root = tempfile.mkdtemp(prefix="chaos_flaky_io_")
+    schedule_cache_clear()
+    topo = Topology(3, 4, 2)
+    for fam in ALLTOALL_FAMILIES:
+        for c in (2, 64, 1024):
+            compiled_schedule("alltoall", fam, topo, topo.k_lanes, c)
+    entries, _ = cache_export()
+    # zero-sleep backoff: the drill wants the retry *logic*, not the wait
+    store = ArtifactStore(
+        root, retry=BackoffPolicy(base_s=0.0, max_s=0.0, max_attempts=3),
+        quarantine_after=3,
+    )
+    for k, v in entries.items():
+        store.put_schedule(k, v)
+    keys = sorted(entries, key=repr)
+
+    victim = str(store._sched_path(keys[0]))   # persistent EIO -> quarantine
+    torn_path = store._sched_path(keys[1])     # truncated once -> read race
+    rng = random.Random(seed ^ 0xC0FFEE)
+    state = {"injected": 0}
+
+    def inject(op, path):
+        if op != "read":
+            return
+        if path == victim:
+            state["injected"] += 1
+            raise OSError(errno.EIO, "chaos: injected EIO (persistent)")
+        if rng.random() < 0.25:
+            state["injected"] += 1
+            raise OSError(errno.EIO, "chaos: injected EIO (transient)")
+
+    races0 = artifacts.read_race_count()
+    completed = recomputes = user_failures = 0
+    artifacts.set_io_fault_injector(inject)
+    try:
+        torn_path.write_bytes(b"PK\x03\x04 torn mid-evict")  # shared-FS torn file
+        for _ in range(rounds):
+            for k in keys:
+                try:
+                    cs = store.get_schedule(k)
+                    if cs is None:
+                        # the resilient contract: a miss recomputes from
+                        # the compiler/process cache and republishes
+                        recomputes += 1
+                        cs = entries[k]
+                        store.put_schedule(k, cs)
+                    completed += 1
+                except Exception:
+                    user_failures += 1
+    finally:
+        artifacts.set_io_fault_injector(None)
+
+    races = artifacts.read_race_count() - races0
+    quarantined = store.quarantine_info()["quarantined"]
+    shutil.rmtree(root, ignore_errors=True)
+    schedule_cache_clear()
+    selector_cache_reset()
+
+    contract_ok = (
+        user_failures == 0
+        and completed == rounds * len(keys)    # every query completed
+        and races >= 1                         # the torn file counted
+        and len(quarantined) == 1              # the EIO victim quarantined
+        and victim in quarantined
+        and recomputes >= 1
+    )
+    return {
+        "kind": "flaky_io_drill",
+        "seed": seed,
+        "queries": rounds * len(keys),
+        "completed": completed,
+        "user_failures": user_failures,
+        "recomputes": recomputes,
+        "read_races": races,
+        "injected_errors": state["injected"],
+        "quarantined": len(quarantined),
+        "contract_ok": bool(contract_ok),
+    }
+
+
+def run_replan_drill(*, seed: int) -> dict:
+    """Jax-free fault-event replanning drill: pinned plans stay pinned
+    across queries, each ``FaultEvent`` replans exactly once (latency
+    p50/p99 reported), and a failing planning dependency trips the
+    breaker into the deadline-exempt base rung, then heals through
+    half-open back to closed."""
+    from repro import api
+    from repro.core.resilience import BackoffPolicy, CircuitBreaker
+    from repro.core.selector import selector_cache_reset
+    from repro.serving.planner import DecodePlanner
+    from repro.training.elastic import FaultEvent
+
+    selector_cache_reset()
+    planner = DecodePlanner(
+        num_slots=4, d_model=256, num_nodes=3, procs_per_node=4, k_lanes=2,
+        replan_deadline_s=2.0,
+    )
+    pinned = planner.plans()
+    pin_stable = all(planner.plans() == pinned for _ in range(3))
+
+    events = [("lane", 0), ("lane", 1), ("lane", 2), ("node", 2)]
+    walls = []
+    for step, (kind, node) in enumerate(events):
+        rep = planner.observe_fault(
+            FaultEvent(kind=kind, node=node, step=step))
+        walls.append(rep["wall_s"])
+    replan_exact = planner.replan_count == len(events)
+    outcomes = [r["outcome"] for r in planner.replan_reports]
+    p50 = float(np.percentile(walls, 50))
+    p99 = float(np.percentile(walls, 99))
+
+    # breaker leg: the planning dependency fails 3 times -> trip to the
+    # base rung; reset_s=0 means the next event probes half-open, fails
+    # once more (re-trip), then heals and closes
+    state = {"fail_left": 3}
+
+    def flaky_plan_batch(reqs):
+        faulted = bool(reqs and reqs[0].faults is not None)
+        base_rung = bool(reqs and reqs[0].deadline_s == 0.0)
+        if faulted and not base_rung and state["fail_left"] > 0:
+            state["fail_left"] -= 1
+            raise OSError("chaos: injected planner outage")
+        return api.plan_batch(reqs)
+
+    p2 = DecodePlanner(
+        num_slots=4, d_model=256, num_nodes=3, procs_per_node=4, k_lanes=2,
+        replan_deadline_s=2.0,
+        backoff=BackoffPolicy(base_s=0.0, max_s=0.0, max_attempts=2),
+        breaker=CircuitBreaker("chaos.replan", failure_threshold=2,
+                               reset_s=0.0),
+        plan_batch_fn=flaky_plan_batch,
+    )
+    r1 = p2.observe_fault(FaultEvent(kind="lane", node=0, step=0))
+    r2 = p2.observe_fault(FaultEvent(kind="lane", node=1, step=1))
+    breaker_ok = (
+        r1["outcome"] == "base-rung"       # outage tripped to the base rung
+        and r2["outcome"] == "replanned"   # half-open probe healed
+        and p2.breaker.trip_count == 2
+        and p2.breaker.state == "closed"
+        and p2.replan_count == 2           # the engine never stalled
+    )
+    selector_cache_reset()
+
+    contract_ok = bool(pin_stable and replan_exact and breaker_ok)
+    return {
+        "kind": "replan_drill",
+        "seed": seed,
+        "pinned_algs": {op: pl.algorithm for op, pl in pinned.items()},
+        "pin_stable": bool(pin_stable),
+        "events": len(events),
+        "replan_count": planner.replan_count,
+        "replan_outcomes": outcomes,
+        "replan_p50_s": round(p50, 6),
+        "replan_p99_s": round(p99, 6),
+        "breaker_trips": p2.breaker.trip_count,
+        "breaker_state": p2.breaker.state,
+        "breaker_outcomes": [r1["outcome"], r2["outcome"]],
+        "contract_ok": contract_ok,
+    }
+
+
+def run_resilience_chaos(*, seed: int) -> dict:
+    """Phase-2 resilience sweep: crash injection, flaky-filesystem IO,
+    and live fault-event replanning, in one report."""
+    crash = run_store_crash_drill(seed=seed)
+    flaky = run_flaky_io_drill(seed=seed)
+    replan = run_replan_drill(seed=seed)
+    ok = (crash["contract_ok"] and flaky["contract_ok"]
+          and replan["contract_ok"])
+    return {
+        "kind": "resilience_chaos",
+        "seed": seed,
+        "crash": crash,
+        "flaky_io": flaky,
+        "replan": replan,
         "ok": bool(ok),
     }
 
@@ -386,50 +722,86 @@ def main(argv=None) -> int:
         "--engine", action="store_true",
         help="also run the jax ServeEngine decode-loop chaos",
     )
+    ap.add_argument(
+        "--resilience", action="store_true",
+        help="run the phase-2 resilience drills (crash / flaky-IO / "
+             "replan) instead of the schedule sweep",
+    )
+    ap.add_argument(
+        "--append", action="store_true",
+        help="append this run's reports to an existing --out file "
+             "(check.sh extends chaos_report.json this way)",
+    )
     args = ap.parse_args(argv)
 
     # the chaos run is always traced (ISSUE 7): the flight recorder is
     # in-memory and cheap, and a contract breach dumps it via forensics
     trace.enable()
-    report = run_schedule_chaos(
-        seed=args.seed, num_nodes=args.nodes, procs_per_node=args.procs,
-        k_lanes=args.lanes, payload=args.payload,
-    )
-    reports = [report]
-    if args.engine:
-        reports.append(run_engine_chaos(seed=args.seed))
+    if args.resilience:
+        reports = [run_resilience_chaos(seed=args.seed)]
+    else:
+        reports = [run_schedule_chaos(
+            seed=args.seed, num_nodes=args.nodes, procs_per_node=args.procs,
+            k_lanes=args.lanes, payload=args.payload,
+        )]
+        if args.engine:
+            reports.append(run_engine_chaos(seed=args.seed))
 
-    ok = all(r["ok"] for r in reports)
-    payload = {"ok": ok, "reports": reports}
+    run_ok = all(r["ok"] for r in reports)
+    out_reports = list(reports)
+    if args.out and args.append and os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prior = json.load(f).get("reports", [])
+        except (OSError, ValueError):
+            prior = []
+        out_reports = prior + out_reports
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-    n_cells = len(report["cells"])
-    n_bad = sum(not c["contract_ok"] for c in report["cells"])
-    print(
-        f"chaos: {n_cells} repair cells ({n_bad} contract breaches), "
-        f"{len(report['selector_ladder'])} ladder scenarios, "
-        f"forensics drill "
-        f"{'ok' if report['forensics_drill']['contract_ok'] else 'FAILED'}"
-        + (f", engine ok={reports[1]['ok']}" if args.engine else "")
-    )
-    if not ok:
+            json.dump({"ok": all(r.get("ok") for r in out_reports),
+                       "reports": out_reports}, f, indent=1, sort_keys=True)
+    for r in reports:
+        if r["kind"] == "schedule_chaos":
+            n_bad = sum(not c["contract_ok"] for c in r["cells"])
+            print(
+                f"chaos: {len(r['cells'])} repair cells ({n_bad} contract "
+                f"breaches), {len(r['selector_ladder'])} ladder scenarios, "
+                f"forensics drill "
+                f"{'ok' if r['forensics_drill']['contract_ok'] else 'FAILED'}"
+            )
+        elif r["kind"] == "engine_chaos":
+            print(f"chaos: engine ok={r['ok']} "
+                  f"(replans={r['replan_count']})")
+        elif r["kind"] == "resilience_chaos":
+            print(
+                f"chaos: resilience crash={'ok' if r['crash']['contract_ok'] else 'FAIL'} "
+                f"flaky_io={'ok' if r['flaky_io']['contract_ok'] else 'FAIL'} "
+                f"(recomputes={r['flaky_io']['recomputes']}, "
+                f"quarantined={r['flaky_io']['quarantined']}) "
+                f"replan={'ok' if r['replan']['contract_ok'] else 'FAIL'} "
+                f"(p99={r['replan']['replan_p99_s']}s, "
+                f"breaker_trips={r['replan']['breaker_trips']})"
+            )
+    if not run_ok:
+        breaches = []
         for r in reports:
             for c in r.get("cells", []):
                 if not c["contract_ok"]:
                     print(f"chaos: FAIL — {c}")
+                    breaches.append(c)
             for c in r.get("selector_ladder", []):
                 if not c["contract_ok"]:
                     print(f"chaos: FAIL — ladder {c}")
             d = r.get("forensics_drill")
             if d and not d["contract_ok"]:
                 print(f"chaos: FAIL — forensics drill {d}")
+            for name in ("crash", "flaky_io", "replan"):
+                d = r.get(name)
+                if d and not d["contract_ok"]:
+                    print(f"chaos: FAIL — {name} drill {d}")
+                    breaches.append(d)
         print("chaos: FAIL")
-        dump = forensics.dump(
-            "chaos_failure",
-            extra={"breaches": [c for c in report["cells"]
-                                if not c["contract_ok"]]},
-        )
+        dump = forensics.dump("chaos_failure", extra={"breaches": breaches})
         print(f"chaos: forensics dump written to {dump}")
         return 1
     print("chaos: OK — every fault scenario repaired or reverted per contract")

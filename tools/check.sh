@@ -60,7 +60,8 @@ else
         tests/test_faults.py \
         tests/test_obs.py \
         tests/test_store.py \
-        tests/test_api.py
+        tests/test_api.py \
+        tests/test_resilience.py
 fi
 
 # lint (CI-fast-job parity): ruff when installed, else a compile check.
@@ -94,6 +95,21 @@ run_step "analyze-smoke" python -m tools.analyze_check \
 # and exercise the selector's degraded ladder.  Deterministic and < 30 s.
 run_step "chaos-smoke" python -m tools.chaos --seed 0 \
     --nodes 3 --procs 4 --lanes 2 --out chaos_report.json
+
+# resilience smoke (ISSUE 10): chaos phase 2 — a writer SIGKILLed
+# mid-store-publish must leave zero torn/duplicate artifacts on restart,
+# seeded flaky-IO injection must complete every query via retry/recompute
+# (quarantining repeat offenders), and fault-event replanning must trip
+# the breaker into the deadline-exempt base rung and heal.  Appends to
+# chaos_report.json (the extended report both CI jobs upload).  The L001
+# lock lint runs first over the new resilience surface explicitly: the
+# store's race counters and quarantine sets are exactly the shared-state
+# class that rule exists for.
+run_step "resilience-smoke" bash -c \
+    "python -m tools.repro_lint src/repro/core/resilience.py \
+        src/repro/store/artifacts.py src/repro/serving && \
+     python -m tools.chaos --resilience --seed 0 \
+        --append --out chaos_report.json"
 
 # paper-scale OPT smoke (ISSUE 5 CI satellite): a single p=1152 alltoall
 # cell through the full optimize-validate pipeline, CHECK_TIMEOUT-bounded,
@@ -137,6 +153,10 @@ rm -f "$FRESH" "$DELTAS"
 run_step "bench-smoke" bash -c \
     "set -o pipefail; python -m benchmarks.run --only paper --json '$FRESH' \
         --deltas '$DELTAS' | tail -n 30"
+# RES counts are seeded-deterministic (small absolute slack only);
+# RES-WALL carries the replan-latency p99 in us, so it gets wall-clock
+# slack like SVC-WALL.
 python tools/bench_gate.py "$FRESH" --baseline BENCH_schedules.json \
-    --table-abs-tol SVC=10 --table-abs-tol SVC-WALL=100000
+    --table-abs-tol SVC=10 --table-abs-tol SVC-WALL=100000 \
+    --table-abs-tol RES=2 --table-abs-tol RES-WALL=1000000
 echo "check.sh: OK"
